@@ -1,0 +1,53 @@
+"""Interpolation kernel microbenchmark (the paper's hot spot, §III-C2).
+
+Measures the oracle's CPU throughput and derives the Pallas kernel's TPU
+bound from its flop/byte structure (the kernel itself is validated in
+interpret mode — wall-clock on CPU is meaningless for it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.tricubic import tricubic_displace_pallas
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for n in (32, 64):
+        f = jnp.asarray(rng.standard_normal((n, n, n)), jnp.float32)
+        d = jnp.asarray(rng.uniform(-3, 3, (3, n, n, n)), jnp.float32)
+        interp = jax.jit(lambda f, d: kops.tricubic_displace(f, d, method="ref"))
+        t = time_fn(interp, f, d)
+        pts = n**3
+        emit(f"kernel/tricubic_ref_N{n}", t * 1e6, f"{pts/t/1e6:.1f} Mpts/s (CPU)")
+
+    # Pallas kernel: structural cost on TPU v5e
+    # direct gather model (paper): 64 loads * 4B + ~600 flops / point
+    t_mem_direct = (64 * 4) / HBM
+    # one-hot matmul model: ~2*W1*(W2*W3)/ (T2*T3) flops/pt on MXU (tile 8x8x32, halo 4)
+    w1, w2, w3, p = 19, 19, 43, 8 * 32
+    flops_pt = 2 * w1 * w2 * w3 / (8 * 32) * (8 * 32) / p + 600  # ~ per point
+    t_mxu = (2 * w1 * w2 * w3) / p / PEAK
+    emit("kernel/tricubic_pallas_model", 0.0,
+         f"direct-gather-bound={1/(t_mem_direct*1e9):.2f} Gpts/s;"
+         f"onehot-mxu-bound={1/(t_mxu*1e9):.2f} Gpts/s per-core")
+
+    # correctness spot check in interpret mode (ensures the kernel path works
+    # in the benchmark environment too)
+    f = jnp.asarray(rng.standard_normal((16, 16, 32)), jnp.float32)
+    d = jnp.asarray(rng.uniform(-3, 3, (3, 16, 16, 32)), jnp.float32)
+    out = tricubic_displace_pallas(f, d, tile=(8, 8, 16), halo=4, interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref.tricubic_displace(f, d))))
+    emit("kernel/tricubic_pallas_interpret_err", err * 1e6, "max-abs-err-times-1e6")
+
+
+if __name__ == "__main__":
+    main()

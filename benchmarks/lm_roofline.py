@@ -1,0 +1,57 @@
+"""LM-architecture roofline summary (reads the dry-run sweep JSON).
+
+Prints one row per (arch x shape) single-pod cell with the three roofline
+terms and bottleneck — the numbers behind EXPERIMENTS §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT_FILES = (
+    "results/dryrun_lm_single.json",
+    "results/dryrun_full.json",
+    "results/dryrun_reg_targeted.json",
+)
+
+
+def main():
+    paths = (
+        [os.environ["DRYRUN_JSON"]]
+        if os.environ.get("DRYRUN_JSON")
+        else [p for p in DEFAULT_FILES if os.path.exists(p)]
+    )
+    if not paths:
+        emit("lm_roofline/missing", 0.0, "run launch.dryrun --all first")
+        return
+    records = []
+    for p in paths:
+        with open(p) as f:
+            records.extend(json.load(f))
+    for r in records:
+        if r.get("status") != "ok" or r.get("mesh") != "16x16":
+            continue
+        if "roofline" in r:
+            rf = r["roofline"]
+            emit(
+                f"lm_roofline/{r['arch']}@{r['shape']}",
+                rf["t_bound_s"] * 1e6,
+                f"bottleneck={rf['bottleneck']};compute={rf['t_compute_s']:.4f}s;"
+                f"memory={rf['t_memory_s']:.4f}s;coll={rf['t_collective_s']:.4f}s;"
+                f"useful={rf['useful_flops_ratio']:.2f};mfu_bound={rf['mfu_bound']:.3f}",
+            )
+        elif "components" in r:
+            for comp, c in r["components"].items():
+                t = max(c["t_compute_s"], c["t_memory_s"], c["t_collective_s"])
+                emit(
+                    f"reg_roofline/{r['arch']}/{comp}",
+                    t * 1e6,
+                    f"compute={c['t_compute_s']:.5f}s;memory={c['t_memory_s']:.5f}s;"
+                    f"coll={c['t_collective_s']:.5f}s",
+                )
+
+
+if __name__ == "__main__":
+    main()

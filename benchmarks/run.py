@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table (+ kernel + LM roofline).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table5     # one
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import kernel_microbench, lm_roofline, table1_scaling, table3_incompressible, table5_beta
+
+TABLES = {
+    "table1": table1_scaling.main,
+    "table3": table3_incompressible.main,
+    "table5": table5_beta.main,
+    "kernel": kernel_microbench.main,
+    "lm_roofline": lm_roofline.main,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in which:
+        try:
+            TABLES[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Paper Table I/II analogue: solver component scaling.
+
+On this CPU container we (a) *measure* wall-clock for the solver and its two
+dominant components (spectral/FFT ops, semi-Lagrangian interpolation) on
+CPU-scale grids, reproducing the paper's per-component accounting, and
+(b) *derive* the paper's (N, p) scaling table from the complexity model of
+§III-C4 combined with TPU v5e roofline constants (the measured dry-run
+collective bytes live in EXPERIMENTS §Roofline):
+
+    T_flop(N,p) = n_t (8 * 7.5 N^3/p log2 N + 4 * 600 N^3/p) / peak
+    T_mem (N,p) ~ n_t * (fields r/w per transport) / (p * HBM_bw)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import gauss_newton as gn
+from repro.core import objective as obj
+from repro.core.grid import make_grid
+from repro.core.spectral import SpectralOps
+from repro.data import synthetic
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def measured_components():
+    for n in (16, 32, 48):
+        rho_R, rho_T, v_star, grid = synthetic.synthetic_problem(n)
+        ops = SpectralOps(grid)
+        v = 0.5 * v_star
+        prob = obj.Problem(grid, rho_R, rho_T, 1e-2, 4, False)
+
+        fft_pair = jax.jit(lambda f: ops.inv_laplacian(ops.laplacian(f)))
+        t_fft = time_fn(fft_pair, rho_T)
+        emit(f"table1/fft_roundtrip_N{n}", t_fft * 1e6, f"grid={n}^3")
+
+        from repro.core.planner import make_plan
+        from repro.kernels import ops as kops
+
+        plan = jax.jit(lambda vv: make_plan(vv, grid, ops, 4, False))(v)
+        interp = jax.jit(lambda f, d: kops.tricubic_displace(f, d, method="ref"))
+        t_int = time_fn(interp, rho_T, plan.disp_fwd)
+        emit(f"table1/interp_N{n}", t_int * 1e6, f"grid={n}^3")
+
+        state_fn = jax.jit(lambda vv: obj.newton_state(vv, prob, ops).g)
+        t_grad = time_fn(state_fn, v)
+        emit(f"table1/gradient_eval_N{n}", t_grad * 1e6, f"grid={n}^3")
+        # interpolation share of a transport-dominated evaluation (paper: ~60%)
+        share = 6 * t_int / max(t_grad, 1e-12)
+        emit(f"table1/interp_share_N{n}", share * 100, "percent-of-gradient(6 interps)")
+
+
+def derived_paper_table():
+    """The paper's Table I rows, re-predicted for TPU v5e chips."""
+    nt = 4
+    rows = [(64, 16), (128, 16), (128, 256), (256, 32), (256, 1024), (512, 128),
+            (512, 1024), (1024, 512), (1024, 2048)]
+    for n, p in rows:
+        import math
+
+        n3 = n**3
+        logn = math.log2(n)
+        flops = nt * (8 * 7.5 * n3 * logn + 4 * 600 * n3) / p
+        t_comp = flops / PEAK
+        # memory: each of 8 n_t FFT round trips + 4 n_t interps streams the
+        # grid a small constant number of times
+        bytes_ = nt * (8 * 6 + 4 * (64 + 2)) * 4.0 * n3 / p
+        t_mem = bytes_ / HBM
+        # ~10 Hessian matvecs + gradient per Newton iter, ~5 Newton iters
+        t_solve = 50 * max(t_comp, t_mem)
+        emit(
+            f"table1_derived/N{n}_p{p}",
+            t_solve * 1e6,
+            f"per-matvec_compute={t_comp*1e6:.1f}us;per-matvec_mem={t_mem*1e6:.1f}us",
+        )
+
+
+def main():
+    measured_components()
+    derived_paper_table()
+
+
+if __name__ == "__main__":
+    main()

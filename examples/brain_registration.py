@@ -1,0 +1,41 @@
+"""Multi-subject brain-like registration (paper §IV-C analogue).
+
+    PYTHONPATH=src python examples/brain_registration.py
+
+Two NIREP-like phantom 'subjects' (shared anatomy, subject-specific jitter),
+solved with beta continuation 1e-1 -> 1e-3 as the paper recommends for
+real-world data; writes axial-slice arrays for inspection.
+"""
+import sys, time
+import numpy as np
+sys.path.insert(0, "src")
+
+from repro.core import gauss_newton as gn
+from repro.core.registration import RegistrationConfig, register
+from repro.data import synthetic
+
+
+def main():
+    n = 32
+    rho_R, rho_T, grid = synthetic.brain_like(n, seed=3)
+    cfg = RegistrationConfig(
+        solver=gn.GNConfig(
+            beta=1e-3, beta_continuation=(1e-1, 1e-2), n_t=4,
+            max_newton=8, gtol=1e-2, max_cg=40,
+        )
+    )
+    t0 = time.time()
+    out = register(rho_R, rho_T, cfg, grid=grid, verbose=True)
+    print(f"\nsolved in {time.time()-t0:.1f}s; residual_rel={out['residual_rel']:.4f}")
+    print(f"det(grad y1) in [{out['det_min']:.3f}, {out['det_max']:.3f}]")
+    mid = n // 2
+    np.save("/tmp/brain_slices.npy", {
+        "ref": np.asarray(rho_R[mid]), "template": np.asarray(rho_T[mid]),
+        "deformed": np.asarray(out["rho_deformed"][mid]),
+        "det": np.asarray(out["det_grad_y"][mid]),
+    }, allow_pickle=True)
+    print("axial slices written to /tmp/brain_slices.npy")
+
+
+if __name__ == "__main__":
+    main()

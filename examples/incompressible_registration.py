@@ -1,0 +1,29 @@
+"""Volume-preserving (incompressible) registration — the paper's hardest mode.
+
+    PYTHONPATH=src python examples/incompressible_registration.py
+
+Enforces div v = 0 via the spectral Leray projection; the resulting map is
+locally volume preserving: det(grad y1) == 1 up to discretization error.
+"""
+import sys, time
+sys.path.insert(0, "src")
+
+from repro.core import gauss_newton as gn
+from repro.core.registration import RegistrationConfig, register
+from repro.data import synthetic
+
+
+def main():
+    n = 24
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(n, incompressible=True, amplitude=0.5)
+    cfg = RegistrationConfig(
+        solver=gn.GNConfig(beta=1e-2, n_t=4, incompressible=True, max_newton=10, gtol=1e-2)
+    )
+    t0 = time.time()
+    out = register(rho_R, rho_T, cfg, grid=grid, verbose=True)
+    print(f"\nsolved in {time.time()-t0:.1f}s; residual_rel={out['residual_rel']:.4f}")
+    print(f"det(grad y1) in [{out['det_min']:.4f}, {out['det_max']:.4f}]  — volume preserving => ~1")
+
+
+if __name__ == "__main__":
+    main()

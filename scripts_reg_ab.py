@@ -1,0 +1,23 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, json
+sys.path.insert(0, "src")
+from repro.launch.dryrun import _reg_component_costs
+from repro.launch.mesh import make_production_mesh
+from repro.core.grid import make_grid
+from repro.dist.context import DistContext
+from repro.configs import REGISTRATION_GRIDS
+
+mesh = make_production_mesh()
+rcfg = REGISTRATION_GRIDS["claire-256"]
+grid = make_grid(rcfg.grid)
+out = {}
+for name, packed, fused in [("baseline", False, False), ("fused", False, True), ("fused+packed", True, True)]:
+    ctx = DistContext(grid, mesh, halo=rcfg.halo, packed=packed)
+    comps = _reg_component_costs(grid, ctx, rcfg, mesh, 256, fused=fused)
+    out[name] = comps
+    for c, v in comps.items():
+        a2a = v["collectives"].get("all-to-all", {}).get("bytes", 0)
+        cp = v["collectives"].get("collective-permute", {}).get("bytes", 0)
+        print(f"{name:14s} {c:15s} coll={v['t_collective_s']*1e3:8.3f}ms  a2a={a2a/1e6:8.1f}MB  halo={cp/1e6:6.1f}MB  mem={v['t_memory_s']*1e3:8.3f}ms")
+json.dump(out, open("results/reg_perf_ab.json", "w"), indent=1)

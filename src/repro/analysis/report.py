@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md tables from dry-run sweep JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report results/*.json > tables.md
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(paths):
+    records = []
+    for p in paths:
+        with open(p) as f:
+            records.extend(json.load(f))
+    # dedupe on (arch, shape, mesh), keeping the LAST occurrence
+    seen = {}
+    for r in records:
+        seen[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(seen.values())
+
+
+def dryrun_table(records) -> str:
+    out = [
+        "| arch | shape | mesh | status | compile(s) | HBM args/chip | HBM temp/chip | collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: (str(r.get("arch")), str(r.get("shape")), str(r.get("mesh")))):
+        mem = r.get("memory", {})
+        colls = r.get("collectives", {})
+        cstr = " ".join(f"{k.split('-')[1] if '-' in k else k}:{v['count']}" for k, v in colls.items()) or "-"
+        out.append(
+            f"| {r.get('arch')} | {r.get('shape')} | {r.get('mesh')} | {r.get('status')} "
+            f"| {r.get('t_compile_s', '-')} | {_fmt_bytes(mem.get('argument_size_in_bytes'))} "
+            f"| {_fmt_bytes(mem.get('temp_size_in_bytes'))} | {cstr} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(records) -> str:
+    out = [
+        "| arch | shape | t_compute | t_memory* | t_collective | bottleneck | useful-flops | MFU-bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: (str(r.get("arch")), str(r.get("shape")))):
+        if r.get("mesh") != "16x16" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.4f}s | {rf['t_memory_s']:.4f}s "
+            f"| {rf['t_collective_s']:.4f}s | **{rf['bottleneck']}** "
+            f"| {rf['useful_flops_ratio']:.2f} | {rf['mfu_bound']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def registration_table(records) -> str:
+    out = [
+        "| grid | component | t_compute | t_memory | t_collective | collective split |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: str(r.get("arch"))):
+        if "components" not in r:
+            continue
+        for comp, c in r["components"].items():
+            colls = c.get("collectives", {})
+            cstr = " ".join(
+                f"{k}:{_fmt_bytes(v['bytes'])}" for k, v in colls.items() if v.get("bytes")
+            )
+            out.append(
+                f"| {r['arch']} ({r['shape']}) | {comp} | {c['t_compute_s']:.5f}s "
+                f"| {c['t_memory_s']:.5f}s | {c['t_collective_s']:.5f}s | {cstr or '-'} |"
+            )
+    return "\n".join(out)
+
+
+def main():
+    records = load(sys.argv[1:])
+    print("## Dry-run matrix\n")
+    print(dryrun_table(records))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(records))
+    print("\n## Registration components (single-pod)\n")
+    print(registration_table(records))
+
+
+if __name__ == "__main__":
+    main()

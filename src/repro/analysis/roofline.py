@@ -1,0 +1,241 @@
+"""Roofline-term extraction from compiled dry-run artifacts (EXPERIMENTS §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 / chip, 819 GB/s HBM, ~50 GB/s
+per ICI link.  The three terms, all in seconds *per step per chip*:
+
+    compute    = HLO_flops / 197e12          (cost_analysis, per-device module)
+    memory     = HLO_bytes / 819e9           (cost_analysis "bytes accessed")
+    collective = collective_bytes / 50e9     (parsed from post-SPMD HLO)
+
+``collective_bytes`` sums the *output* shapes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in the per-device optimized module (all-reduce counted twice: a
+bandwidth-optimal ring moves ~2 bytes per reduced byte).  cost_analysis is
+not collective-aware — this parser is the required supplement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes / s / chip
+ICI_BW = 50e9  # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# one HLO result shape, e.g. f32[256,4096]{1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from optimized HLO text."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLLECTIVES:
+            # op name appears right after the result shape(s)
+            if re.search(rf"\)?\s{k}(?:-start|-done)?\(", rhs) or rhs.startswith(k):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue  # bytes counted at the -start op
+        # result shapes: either "f32[..]" or a tuple "(f32[..], f32[..])"
+        paren = rhs.find(f" {kind}")
+        head = rhs[: paren if paren > 0 else len(rhs)]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        if kind == "all-reduce":
+            nbytes *= 2  # ring all-reduce moves ~2x the payload
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    model_flops: float = 0.0  # 6 N D (dense) / 6 N_active D (MoE) per step
+    hbm_bytes_model: float = 0.0  # analytic TPU-expected traffic (see below)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        """XLA-CPU 'bytes accessed' term — fusion-less upper bound."""
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_memory_model(self) -> float:
+        """Analytic TPU-expected memory term (used for bottleneck calls)."""
+        return (self.hbm_bytes_model or self.hbm_bytes) / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory_model,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory_model, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_flops): compiled-compute usefulness."""
+        if not self.model_flops:
+            return 0.0
+        return self.model_flops / max(self.chips * self.flops, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Achievable MFU upper bound: useful flops / (chips*peak*t_bound)."""
+        if not self.model_flops:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.t_bound)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "hbm_bytes_model_per_chip": self.hbm_bytes_model,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_xla_s": self.t_memory,
+            "t_memory_s": self.t_memory_model,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "chips": self.chips,
+        }
+
+
+def analyze_compiled(compiled, chips: int, model_flops: float = 0.0) -> tuple[Roofline, dict]:
+    """Extract roofline terms from a jax compiled artifact."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(compiled.as_text())
+    rl = Roofline(
+        flops=flops,
+        hbm_bytes=nbytes,
+        collective_bytes=float(coll["total_bytes"]),
+        chips=chips,
+        model_flops=model_flops,
+    )
+    return rl, coll
+
+
+def analytic_memory_bytes(cfg, shape: dict, chips: int) -> float:
+    """TPU-expected HBM traffic per chip per step (napkin model).
+
+    The XLA-CPU "bytes accessed" metric counts unfused intermediates that a
+    TPU compile would keep in registers/VMEM, so it over-estimates HBM
+    traffic by ~5-15x.  This model counts only traffic that *must* hit HBM:
+
+      train:   params (bf16 fwd read + bwd read) + grads (f32 w) +
+               adam m/v (f32 r+w each) + param write  ~ 26 B/param
+               + remat residual stream (store+reload) + logits r/w
+      prefill: params read + residuals + logits
+      decode:  *active* params read once per token + full cache read +
+               one slot write  (the classic decode memory bound)
+    """
+    b, s, kind = shape["batch"], shape["seq"], shape["kind"]
+    p_total = cfg.param_count()
+    p_active = cfg.active_param_count()
+    d = cfg.d_model
+    layers = cfg.n_layers + (cfg.enc_layers or 0)
+    vp = cfg.vocab_padded
+
+    if kind == "train":
+        param_traffic = p_total * 26.0
+        resid = layers * b * s * d * 2 * 2.0  # store+reload, bf16
+        logits = 2 * b * s * vp * 2.0
+        return (param_traffic + resid + logits) / chips
+    if kind == "prefill":
+        param_traffic = p_total * 2.0
+        resid = layers * b * s * d * 2.0
+        logits = b * s * vp * 2.0
+        return (param_traffic + resid + logits) / chips
+    # decode: one token
+    if cfg.n_experts:  # only routed experts' weights stream in
+        frac = min(1.0, b * cfg.top_k / cfg.n_experts)
+        expert_all = cfg.n_groups * cfg.n_experts * 3 * d * cfg.d_ff
+        p_read = (p_total - expert_all) + frac * expert_all
+    else:
+        p_read = p_total
+    cache = 0.0
+    if cfg.ssm_state:  # SSM state r+w
+        n_mamba = sum(1 for k in cfg.layer_pattern if k == "mamba") * cfg.n_groups
+        cache += 2 * n_mamba * b * cfg.d_inner * cfg.ssm_state / cfg.ssm_head_dim * 4.0 * cfg.ssm_head_dim
+    n_attn = sum(1 for k in cfg.layer_pattern if k != "mamba") * cfg.n_groups
+    if cfg.enc_layers:
+        n_attn = cfg.n_layers * 2  # self + cross
+    if n_attn and cfg.n_kv:
+        window = cfg.sliding_window
+        per_layer_len = []
+        for k in cfg.layer_pattern * cfg.n_groups:
+            if k == "mamba":
+                continue
+            per_layer_len.append(min(window, s) if (k == "local" and window) else s)
+        if cfg.enc_layers:
+            per_layer_len = [s] * (2 * cfg.n_layers)
+        cache += sum(per_layer_len) * b * 2 * cfg.n_kv * cfg.head_dim * 2.0
+    return (p_read * 2.0 + cache) / chips
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    return {k: getattr(ma, k, None) for k in keys if getattr(ma, k, None) is not None}

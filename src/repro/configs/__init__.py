@@ -1,0 +1,46 @@
+"""Config registry: ``get_config("gemma-7b")`` / ``list_archs()``."""
+from __future__ import annotations
+
+from repro.configs import (
+    gemma3_1b,
+    gemma_7b,
+    mamba2_130m,
+    minitron_4b,
+    moonshot_v1_16b_a3b,
+    qwen2_vl_72b,
+    qwen3_1_7b,
+    qwen3_moe_235b_a22b,
+    seamless_m4t_large_v2,
+    zamba2_2_7b,
+)
+from repro.configs.claire_registration import GRIDS as REGISTRATION_GRIDS
+
+_MODULES = {
+    m.ARCH_ID: m
+    for m in (
+        gemma_7b,
+        gemma3_1b,
+        minitron_4b,
+        qwen3_1_7b,
+        mamba2_130m,
+        qwen2_vl_72b,
+        seamless_m4t_large_v2,
+        moonshot_v1_16b_a3b,
+        qwen3_moe_235b_a22b,
+        zamba2_2_7b,
+    )
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str):
+    return _MODULES[arch_id].config()
+
+
+def get_smoke_config(arch_id: str):
+    return _MODULES[arch_id].smoke_config()
+
+
+def list_archs():
+    return list(ARCH_IDS)

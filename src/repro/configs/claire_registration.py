@@ -1,0 +1,28 @@
+"""The paper's own 'architecture': CLAIRE-style diffeomorphic registration.
+
+Grid-size configs used by the dry-run and benchmarks: the paper's scaling
+study covers 64^3 .. 1024^3 (Tables I/II) plus the 256x300x256 brain pair
+(Table IV; padded to 256x304x256 for the 16x16 pencil mesh).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RegConfig:
+    name: str
+    grid: tuple
+    beta: float = 1e-2
+    n_t: int = 4
+    incompressible: bool = False
+    halo: int = 8
+
+
+GRIDS = {
+    "claire-64": RegConfig("claire-64", (64, 64, 64)),
+    "claire-128": RegConfig("claire-128", (128, 128, 128)),
+    "claire-256": RegConfig("claire-256", (256, 256, 256)),
+    "claire-512": RegConfig("claire-512", (512, 512, 512)),
+    "claire-1024": RegConfig("claire-1024", (1024, 1024, 1024)),
+    "claire-256-inc": RegConfig("claire-256-inc", (256, 256, 256), incompressible=True),
+    "claire-brain": RegConfig("claire-brain", (256, 304, 256), beta=1e-4),
+}

@@ -1,0 +1,109 @@
+"""Shared config machinery: assigned input shapes, smoke reduction, specs.
+
+The four assigned LM shape cells (per architecture):
+    train_4k     seq 4096,   global batch 256   -> train_step
+    prefill_32k  seq 32768,  global batch 32    -> forward (prefill)
+    decode_32k   seq 32768,  global batch 128   -> serve_step (1 new token)
+    long_500k    seq 524288, global batch 1     -> serve_step; sub-quadratic
+                                                   archs only (see DESIGN §5)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (never allocates) plus
+PartitionSpecs for each input — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig
+
+SHAPES = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+# archs whose attention is sub-quadratic (SSM / hybrid / mostly-windowed):
+# the only ones that run long_500k (DESIGN.md §5 records the skips).
+LONG_CONTEXT_OK = {"mamba2-130m", "zamba2-2.7b", "gemma3-1b"}
+
+
+def is_cell_supported(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.name not in LONG_CONTEXT_OK:
+        return False, "skipped: pure full attention (quadratic prefill at 512k)"
+    return True, ""
+
+
+def batch_spec(mesh, size: int | None = None) -> P:
+    """Batch-dim spec over (pod, data), dropped when ``size`` won't divide."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if size is not None and axes:
+        total = 1
+        for a in axes:
+            total *= int(mesh.shape[a])
+        if size % total != 0:
+            axes = tuple(a for a in axes if size % int(mesh.shape[a]) == 0)[:1]
+        if size == 1:
+            axes = ()
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def token_inputs(cfg: ArchConfig, shape: dict, mesh):
+    """ShapeDtypeStructs + PartitionSpecs for one shape cell's data inputs."""
+    b, s = shape["batch"], shape["seq"]
+    bspec = batch_spec(mesh, b)
+    sd = jax.ShapeDtypeStruct
+    if cfg.family in ("encdec", "audio") and cfg.enc_layers:
+        s_enc, s_dec = s // 2, s // 2
+        specs = {
+            "frames": sd((b, s_enc, cfg.d_model), jnp.bfloat16),
+            "tokens": sd((b, s_dec), jnp.int32),
+            "labels": sd((b, s_dec), jnp.int32),
+        }
+        shardings = {
+            "frames": P(*bspec, None, None),
+            "tokens": P(*bspec, None),
+            "labels": P(*bspec, None),
+        }
+    else:
+        specs = {"tokens": sd((b, s), jnp.int32), "labels": sd((b, s), jnp.int32)}
+        shardings = {"tokens": P(*bspec, None), "labels": P(*bspec, None)}
+    return specs, shardings
+
+
+def smoke_reduce(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Tiny same-family config: CPU-runnable forward/train smoke tests."""
+    pattern = cfg.layer_pattern
+    if cfg.name.startswith("gemma3"):
+        pattern = ("local",) * 2 + ("global",)
+    elif cfg.name.startswith("zamba2"):
+        pattern = ("shared", "mamba", "mamba")
+    n_layers = len(pattern) * 2
+    changes = dict(
+        n_layers=n_layers,
+        layer_pattern=pattern,
+        d_model=64,
+        n_heads=4,
+        n_kv=min(cfg.n_kv, 2) if cfg.n_kv < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128,
+        vocab=503,  # deliberately not a multiple of the pad -> exercises padding
+        vocab_pad_multiple=64,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        enc_layers=2 if cfg.enc_layers else 0,
+        sliding_window=8 if cfg.sliding_window else None,
+        mrope_sections=(2, 3, 3) if cfg.mrope_sections else None,
+        dtype=jnp.float32,
+        remat=False,
+        name=cfg.name + "-smoke",
+    )
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,26 @@
+"""gemma3-1b [dense] — 26L d_model=1152 4H (GQA kv=1, MQA) d_ff=6912
+vocab=262144; 5 local(sliding 512):1 global pattern, qk-norm, 128k ctx.
+[hf:google/gemma-3-1b-pt; unverified]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "gemma3-1b"
+
+# every 6th layer is global attention; 26 layers -> 22 local + 4 global
+_PATTERN = tuple("global" if (i + 1) % 6 == 0 else "local" for i in range(26))
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=26, d_model=1152, n_heads=4, n_kv=1, head_dim=256,
+        d_ff=6912, vocab=262144,
+        mlp="geglu", embed_scale=True, tie_embeddings=True, qk_norm=True,
+        sliding_window=512, layer_pattern=_PATTERN, rope_theta=1_000_000.0,
+        notes="single rope_theta used for local+global (hf uses 10k local/1M global); "
+        "pattern unrolled in one scan group (26 layers, small model).",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

@@ -1,0 +1,22 @@
+"""gemma-7b [dense] — 28L d_model=3072 16H (GQA kv=16) d_ff=24576
+vocab=256000; GeGLU, head_dim=256, scaled embeddings, tied head.
+[arXiv:2403.08295; hf]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "gemma-7b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=28, d_model=3072, n_heads=16, n_kv=16, head_dim=256,
+        d_ff=24576, vocab=256000,
+        mlp="geglu", embed_scale=True, tie_embeddings=True,
+        layer_pattern=("attn",), rope_theta=10_000.0,
+        notes="MQA appears on gemma-2b only; 7b is full 16/16 MHA.",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

@@ -1,0 +1,21 @@
+"""mamba2-130m [ssm] — 24L d_model=768, attention-free, vocab=50280,
+ssm_state=128; SSD (state-space duality), headdim 64, expand 2.
+[arXiv:2405.21060; unverified]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "mamba2-130m"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="ssm",
+        n_layers=24, d_model=768, n_heads=0, n_kv=0, head_dim=0,
+        d_ff=0, vocab=50280,
+        tie_embeddings=True, layer_pattern=("mamba",),
+        ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

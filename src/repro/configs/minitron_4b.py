@@ -1,0 +1,21 @@
+"""minitron-4b [dense] — 32L d_model=3072 24H (GQA kv=8) d_ff=9216
+vocab=256000; pruned nemotron: squared-ReLU MLP, untied embeddings.
+[arXiv:2407.14679; hf]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "minitron-4b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=32, d_model=3072, n_heads=24, n_kv=8, head_dim=128,
+        d_ff=9216, vocab=256000,
+        mlp="relu2", tie_embeddings=False,
+        layer_pattern=("attn",), rope_theta=10_000.0,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

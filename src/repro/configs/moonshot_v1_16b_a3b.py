@@ -1,0 +1,21 @@
+"""moonshot-v1-16b-a3b [moe] — 48L d_model=2048 16H (kv=16) expert
+d_ff=1408 vocab=163840, MoE 64 experts top-6 (kimi/moonlight).
+[hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "moonshot-v1-16b-a3b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="moe",
+        n_layers=48, d_model=2048, n_heads=16, n_kv=16, head_dim=128,
+        d_ff=1408, vocab=163840,
+        mlp="swiglu", tie_embeddings=True,
+        n_experts=64, top_k=6, layer_pattern=("attn_moe",),
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

@@ -1,0 +1,24 @@
+"""qwen2-vl-72b [vlm] — 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064; 3-section M-RoPE (t/h/w), dynamic-resolution ViT frontend is a
+STUB (input_specs supplies patch embeddings). [arXiv:2409.12191; hf]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "qwen2-vl-72b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="vlm",
+        n_layers=80, d_model=8192, n_heads=64, n_kv=8, head_dim=128,
+        d_ff=29568, vocab=152064,
+        mlp="swiglu", tie_embeddings=False,
+        mrope_sections=(16, 24, 24), rope_theta=1_000_000.0,
+        layer_pattern=("attn",),
+        notes="LM shape cells drive the text backbone; text tokens use "
+        "(t,t,t) M-RoPE positions. Vision patches enter as embeds overrides.",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

@@ -1,0 +1,20 @@
+"""qwen3-1.7b [dense] — 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936; per-head RMS qk-norm, SwiGLU. [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "qwen3-1.7b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=28, d_model=2048, n_heads=16, n_kv=8, head_dim=128,
+        d_ff=6144, vocab=151936,
+        mlp="swiglu", qk_norm=True, tie_embeddings=True,
+        layer_pattern=("attn",), rope_theta=1_000_000.0,
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

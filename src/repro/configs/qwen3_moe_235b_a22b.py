@@ -1,0 +1,24 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d_model=4096 64H (GQA kv=4) expert
+d_ff=1536 vocab=151936, MoE 128 experts top-8, qk-norm.
+[hf:Qwen/Qwen3-235B-A22B family; hf]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "qwen3-moe-235b-a22b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="moe",
+        n_layers=94, d_model=4096, n_heads=64, n_kv=4, head_dim=128,
+        d_ff=1536, vocab=151936,
+        mlp="swiglu", qk_norm=True, tie_embeddings=False,
+        n_experts=128, top_k=8, layer_pattern=("attn_moe",),
+        rope_theta=1_000_000.0,
+        notes="kv=4 heads cannot split 16-way TP: ShardRules falls back to "
+        "replicated kv (logged); cache shards over batch instead.",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

@@ -1,0 +1,22 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, 24L encoder + 24L decoder,
+d_model=1024 16H (kv=16) d_ff=8192 vocab=256206; the speech frontend is a
+STUB (input_specs supplies frame embeddings). [arXiv:2308.11596; hf]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "seamless-m4t-large-v2"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="encdec",
+        n_layers=24, enc_layers=24, d_model=1024, n_heads=16, n_kv=16,
+        head_dim=64, d_ff=8192, vocab=256206,
+        mlp="swiglu", tie_embeddings=True,
+        layer_pattern=("attn",),
+        notes="vocab 256206 padded to 256256 for 16-way TP divisibility.",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

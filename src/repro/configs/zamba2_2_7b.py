@@ -1,0 +1,27 @@
+"""zamba2-2.7b [hybrid] — 54L d_model=2560 32H (kv=32) d_ff=10240
+vocab=32000, ssm_state=64; Mamba2 backbone + SHARED attention block every
+9th slot (6 invocations of one weight set). [arXiv:2411.15242; hf]"""
+from repro.configs.common import smoke_reduce
+from repro.models.common import ArchConfig
+
+ARCH_ID = "zamba2-2.7b"
+
+_PATTERN = ("shared",) + ("mamba",) * 8  # 54 layers = 6 groups x 9
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID, family="hybrid",
+        n_layers=54, d_model=2560, n_heads=32, n_kv=32, head_dim=80,
+        d_ff=10240, vocab=32000,
+        mlp="swiglu", tie_embeddings=True,
+        layer_pattern=_PATTERN,
+        ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+        notes="shared block reuses one param set across its 6 invocations "
+        "(per-invocation LoRA deltas of the hf model omitted); each "
+        "invocation keeps its own KV cache.",
+    )
+
+
+def smoke_config() -> ArchConfig:
+    return smoke_reduce(config())

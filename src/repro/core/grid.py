@@ -1,0 +1,98 @@
+"""Periodic Cartesian grid on Omega = [0, 2pi)^3 (paper §II, §III-B1).
+
+All registration fields live on a regular grid with periodic boundary
+conditions.  Scalars have shape ``(N1, N2, N3)``; vector fields are stored
+component-major as ``(3, N1, N2, N3)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import jax.numpy as jnp
+import numpy as np
+
+TWO_PI = 2.0 * np.pi
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    """Static description of the spatial grid (hashable; safe as jit static)."""
+
+    shape: tuple[int, int, int]
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def n(self) -> tuple[int, int, int]:
+        return self.shape
+
+    @property
+    def num_points(self) -> int:
+        n1, n2, n3 = self.shape
+        return n1 * n2 * n3
+
+    @property
+    def spacing(self) -> tuple[float, float, float]:
+        return tuple(TWO_PI / ni for ni in self.shape)
+
+    @property
+    def cell_volume(self) -> float:
+        """Quadrature weight h1*h2*h3 for L2 inner products (mesh independence)."""
+        h1, h2, h3 = self.spacing
+        return h1 * h2 * h3
+
+    @cached_property
+    def coords(self) -> np.ndarray:
+        """Physical coordinates x_i = 2*pi*i/N, shape (3, N1, N2, N3)."""
+        axes = [np.arange(ni) * (TWO_PI / ni) for ni in self.shape]
+        return np.stack(np.meshgrid(*axes, indexing="ij"), axis=0)
+
+    def coords_jnp(self) -> jnp.ndarray:
+        return jnp.asarray(self.coords, dtype=self.dtype)
+
+    # --- wavenumbers (integer modes; spectral derivative is i*k) ---------
+    def wavenumbers(self, axis: int) -> np.ndarray:
+        n = self.shape[axis]
+        return np.fft.fftfreq(n, d=1.0 / n)  # integers 0..N/2-1, -N/2..-1
+
+    def wavenumbers_rfft(self) -> np.ndarray:
+        n = self.shape[2]
+        return np.fft.rfftfreq(n, d=1.0 / n)  # 0..N/2
+
+    def k_grids(self, rfft_last: bool = True) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Broadcastable integer wavenumber grids (k1, k2, k3)."""
+        k1 = self.wavenumbers(0).reshape(-1, 1, 1)
+        k2 = self.wavenumbers(1).reshape(1, -1, 1)
+        k3 = (self.wavenumbers_rfft() if rfft_last else self.wavenumbers(2)).reshape(1, 1, -1)
+        return k1, k2, k3
+
+    def k_deriv(self, rfft_last: bool = True) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Wavenumbers for odd-order derivatives: Nyquist mode zeroed.
+
+        The derivative of the real Nyquist mode has no consistent sign; the
+        standard spectral convention zeroes it (keeps d/dx skew-adjoint).
+        """
+        out = []
+        for axis, k in enumerate(self.k_grids(rfft_last)):
+            n = self.shape[axis]
+            if n % 2 == 0:
+                k = np.where(np.abs(k) == n // 2, 0.0, k)
+            out.append(k)
+        return tuple(out)
+
+    def inner(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Weighted L2 inner product <a, b> = h^3 * sum(a*b) (any rank).
+
+        Accumulates in at-least-f32 (bf16 inputs are upcast; f64 preserved).
+        """
+        acc = jnp.promote_types(jnp.result_type(a, b), jnp.float32)
+        return jnp.sum(a.astype(acc) * b.astype(acc)) * self.cell_volume
+
+    def norm_sq(self, a: jnp.ndarray) -> jnp.ndarray:
+        return self.inner(a, a)
+
+
+def make_grid(n, dtype=jnp.float32) -> Grid:
+    if isinstance(n, int):
+        n = (n, n, n)
+    return Grid(shape=tuple(int(x) for x in n), dtype=dtype)

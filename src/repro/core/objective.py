@@ -1,0 +1,156 @@
+"""Objective, reduced gradient, and Gauss-Newton Hessian matvec (paper §II-B).
+
+    J[v]   = 1/2 ||rho(1) - rho_R||^2_L2 + beta/2 ||Lap v||^2_L2          (2a)
+    g(v)   = beta Lap^2 v + P b,    b = int_0^1 lam grad rho dt           (4)
+    H vt   = beta Lap^2 vt + P bt,  bt = int_0^1 lamt grad rho dt (GN)    (5e)
+
+``P`` is the Leray projection in incompressible mode, identity otherwise.
+A ``NewtonState`` caches everything reusable across the PCG matvecs of one
+Newton iteration: the SL plan (departure points), the state series rho(t),
+and — a deliberate memory-for-FFTs trade documented in EXPERIMENTS §Perf —
+the spectral gradients grad rho(t_k) for all k.  With that cache a GN
+Hessian matvec in incompressible mode needs *zero* transport FFTs (only the
+regularization/Leray diagonal ops), versus 8 n_t in the paper's Alg. 2
+accounting.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semilag
+from repro.core.grid import Grid
+from repro.core.planner import SLPlan, make_plan
+from repro.core.spectral import SpectralOps
+
+
+class Problem(NamedTuple):
+    grid: Grid
+    rho_R: jnp.ndarray
+    rho_T: jnp.ndarray
+    beta: float
+    n_t: int
+    incompressible: bool
+
+
+class NewtonState(NamedTuple):
+    """Per-Newton-iteration cache shared by gradient and all Hessian matvecs."""
+
+    v: jnp.ndarray
+    plan: SLPlan
+    rho_series: jnp.ndarray  # (n_t+1, N1,N2,N3)
+    grad_rho_series: jnp.ndarray  # (n_t+1, 3, N1,N2,N3)
+    lam_series: jnp.ndarray  # (n_t+1, N1,N2,N3)
+    g: jnp.ndarray  # reduced gradient (3, N1,N2,N3)
+    misfit: jnp.ndarray  # 1/2 ||rho(1)-rho_R||^2
+    reg: jnp.ndarray  # beta/2 ||Lap v||^2
+    j_val: jnp.ndarray
+
+
+def _project(ops: SpectralOps, field: jnp.ndarray, incompressible: bool) -> jnp.ndarray:
+    return ops.leray(field) if incompressible else field
+
+
+def evaluate_objective(
+    v: jnp.ndarray, prob: Problem, ops: SpectralOps, interp=None, plan: SLPlan | None = None
+):
+    """J(v) — one forward transport + one spectral regularization energy."""
+    if plan is None:
+        plan = make_plan(v, prob.grid, ops, prob.n_t, prob.incompressible, interp)
+    rho_series = semilag.transport_state(prob.rho_T, plan, interp)
+    rho1 = rho_series[-1]
+    misfit = 0.5 * prob.grid.norm_sq(rho1 - prob.rho_R)
+    reg = ops.reg_energy(v, prob.beta)
+    return misfit + reg, (misfit, reg, rho_series, plan)
+
+
+def newton_state(
+    v: jnp.ndarray, prob: Problem, ops: SpectralOps, interp=None, fused: bool = False
+) -> NewtonState:
+    """Forward + adjoint solves, reduced gradient, and the matvec cache.
+
+    ``fused=True`` assembles ``beta Lap^2 v + P b`` in one spectral round
+    trip (beyond-paper optimization; see EXPERIMENTS §Perf)."""
+    plan = make_plan(v, prob.grid, ops, prob.n_t, prob.incompressible, interp)
+    rho_series = semilag.transport_state(prob.rho_T, plan, interp)
+    rho1 = rho_series[-1]
+
+    # adjoint terminal condition lam(1) = rho_R - rho(1)   (eq. 3)
+    lam_series = semilag.transport_adjoint(prob.rho_R - rho1, plan, interp)
+
+    # cache grad rho(t_k): ONE batched spectral gradient over all slices
+    # (leading dims pass through both FFT backends; no vmap-of-shard_map)
+    grad_rho_series = jnp.swapaxes(ops.grad(rho_series), 0, 1)  # (n_t+1, 3, N..)
+
+    b = semilag.time_integral_b(lam_series, grad_rho_series, plan.dt)
+    # eq. (4): g = beta Lap^2 v + P b, with lam(1) = rho_R - rho(1).
+    # (sanity: at v=0, <g,w> = <(rho_R-rho_T) grad rho_T, w> = dJ/deps.)
+    if fused:
+        g = ops.reg_plus_project(v, b, prob.beta, prob.incompressible)
+    else:
+        g = ops.reg_apply(v, prob.beta) + _project(ops, b, prob.incompressible)
+
+    misfit = 0.5 * prob.grid.norm_sq(rho1 - prob.rho_R)
+    reg = ops.reg_energy(v, prob.beta)
+    return NewtonState(
+        v=v,
+        plan=plan,
+        rho_series=rho_series,
+        grad_rho_series=grad_rho_series,
+        lam_series=lam_series,
+        g=g,
+        misfit=misfit,
+        reg=reg,
+        j_val=misfit + reg,
+    )
+
+
+def gn_hessian_matvec(
+    vtilde: jnp.ndarray,
+    state: NewtonState,
+    prob: Problem,
+    ops: SpectralOps,
+    interp=None,
+    fused: bool = False,
+) -> jnp.ndarray:
+    """Gauss-Newton Hessian action, eq. (5) with the lambda terms dropped.
+
+    Two transport solves (incremental state forward, incremental adjoint
+    backward) — both interpolation-only thanks to the grad-rho cache — plus
+    the diagonal regularization and Leray ops.
+    """
+    rho1_t = semilag.transport_inc_state(vtilde, state.grad_rho_series, state.plan, interp)
+    lamt_series = semilag.transport_inc_adjoint(-rho1_t, state.plan, interp)
+    bt = semilag.time_integral_b(lamt_series, state.grad_rho_series, state.plan.dt)
+    # eq. (5e): H vt = beta Lap^2 vt + P bt, with lam~(1) = -rho~(1);
+    # the data block is the Gauss-Newton (J^T J) term — PSD (tested).
+    if fused:
+        return ops.reg_plus_project(vtilde, bt, prob.beta, prob.incompressible)
+    return ops.reg_apply(vtilde, prob.beta) + _project(ops, bt, prob.incompressible)
+
+
+def full_hessian_matvec(
+    vtilde: jnp.ndarray, state: NewtonState, prob: Problem, ops: SpectralOps, interp=None
+) -> jnp.ndarray:
+    """FULL Newton Hessian action — paper eq. (5) with every term.
+
+    vs Gauss-Newton this keeps (i) the div(lam vt) source in the incremental
+    adjoint (5c) and (ii) the lam grad(rho~) term in b~.  Costs one stored
+    rho~(t) series, one batched spectral divergence series, and one batched
+    gradient series more than the GN matvec.  Near the solution (lam -> 0)
+    it coincides with GN (tested); away from it the data block may be
+    indefinite, which is exactly why the paper defaults to GN (§IV-A3).
+    """
+    rho_t_series = semilag.transport_inc_state_series(
+        vtilde, state.grad_rho_series, state.plan, interp
+    )
+    lamt_series = semilag.transport_inc_adjoint_newton(
+        -rho_t_series[-1], state.lam_series, vtilde, state.plan, ops, interp
+    )
+    bt = semilag.time_integral_b(lamt_series, state.grad_rho_series, state.plan.dt)
+    # second term of b~: int lam(t) grad rho~(t) dt
+    grad_rho_t = jnp.swapaxes(ops.grad(rho_t_series), 0, 1)  # (n_t+1, 3, N..)
+    bt = bt + semilag.time_integral_b(state.lam_series, grad_rho_t, state.plan.dt)
+    return ops.reg_apply(vtilde, prob.beta) + _project(ops, bt, prob.incompressible)

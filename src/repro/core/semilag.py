@@ -1,0 +1,226 @@
+"""Semi-Lagrangian transport solvers (paper §III-B2, eq. (6)-(7), Alg. 2).
+
+Unconditionally stable RK2 along characteristics, so ``n_t = 4`` time steps
+suffice (the paper's setting) and storing all time slices is feasible —
+which the Gauss-Newton Hessian needs (eq. (5) requires rho(t) at all t).
+
+Every solver takes an ``SLPlan`` (departure points computed once per
+velocity — paper's planner) and an ``interp`` callable so the same code
+runs single-device (oracle/Pallas kernels) and distributed (halo-exchange
+interpolation from repro.dist.halo).
+
+General scheme for  d_t nu + v . grad nu = f  (paper eq. (7)):
+
+    nu0X  = nu(X, t)            (interpolated at departure points)
+    f0X   = f(., t) at X        (f formed on the grid, then interpolated)
+    nu*   = nu0X + dt f0X
+    f*    = f(., t+dt) at x     (on the grid)
+    nu(x, t+dt) = nu0X + dt/2 (f0X + f*)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import SLPlan
+from repro.kernels import ops as kops
+
+
+def _default_interp(field, disp):
+    return kops.tricubic_displace(field, disp, method="ref")
+
+
+# --------------------------------------------------------------------------- #
+# state equation (2b): pure advection, forward in time
+# --------------------------------------------------------------------------- #
+def transport_state(rho0: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
+    """Solve d_t rho + v.grad rho = 0; returns all slices (n_t+1, N1,N2,N3)."""
+    interp = interp or _default_interp
+
+    def step(rho, _):
+        nxt = interp(rho, plan.disp_fwd)
+        return nxt, nxt
+
+    _, series = jax.lax.scan(step, rho0, None, length=plan.n_t)
+    return jnp.concatenate([rho0[None], series], axis=0)
+
+
+# --------------------------------------------------------------------------- #
+# adjoint equation (3): -d_t lam - div(v lam) = 0, backward in time.
+# In tau = 1-t:  d_tau lam + (-v).grad lam = lam div v.
+# Incompressible (div v = 0): pure advection along -v.
+# --------------------------------------------------------------------------- #
+def transport_adjoint(lam1: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
+    """Returns lam at all *t*-slices, index k = t_k (so [..., -1] is t=1)."""
+    interp = interp or _default_interp
+    dt = plan.dt
+
+    if plan.divv is None:
+
+        def step(lam, _):
+            nxt = interp(lam, plan.disp_adj)
+            return nxt, nxt
+
+    else:
+        divv = plan.divv
+
+        def step(lam, _):
+            lam0X = interp(lam, plan.disp_adj)
+            f0X = interp(lam * divv, plan.disp_adj)
+            lam_star = lam0X + dt * f0X
+            f_star = lam_star * divv
+            nxt = lam0X + 0.5 * dt * (f0X + f_star)
+            return nxt, nxt
+
+    _, series_tau = jax.lax.scan(step, lam1, None, length=plan.n_t)
+    series = jnp.concatenate([lam1[None], series_tau], axis=0)
+    return series[::-1]  # tau-order -> t-order
+
+
+# --------------------------------------------------------------------------- #
+# incremental state equation (5a) (Alg. 2):
+#   d_t rho~ + v.grad rho~ = -v~ . grad rho(t),  rho~(0) = 0
+# --------------------------------------------------------------------------- #
+def transport_inc_state(
+    vtilde: jnp.ndarray,
+    grad_rho_series: jnp.ndarray,  # (n_t+1, 3, N1,N2,N3), precomputed spectrally
+    plan: SLPlan,
+    interp=None,
+) -> jnp.ndarray:
+    """Returns rho~(1) (only the final slice is needed for Gauss-Newton)."""
+    interp = interp or _default_interp
+    dt = plan.dt
+    rho0 = jnp.zeros_like(grad_rho_series[0, 0])
+
+    def source(k):
+        # f(., t_k) = -v~ . grad rho(t_k) on the grid
+        return -jnp.sum(vtilde * grad_rho_series[k], axis=0)
+
+    def step(carry, k):
+        rt = carry
+        f0 = source(k)
+        rt0X = interp(rt, plan.disp_fwd)
+        f0X = interp(f0, plan.disp_fwd)
+        f_star = source(k + 1)
+        nxt = rt0X + 0.5 * dt * (f0X + f_star)
+        return nxt, None
+
+    rho1, _ = jax.lax.scan(step, rho0, jnp.arange(plan.n_t))
+    return rho1
+
+
+# --------------------------------------------------------------------------- #
+# incremental adjoint (5c), Gauss-Newton form (drop lambda terms):
+#   -d_t lam~ - div(lam~ v) = 0,  lam~(1) = -rho~(1)
+# Same operator as the adjoint equation.
+# --------------------------------------------------------------------------- #
+def transport_inc_adjoint(lam1: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
+    return transport_adjoint(lam1, plan, interp)
+
+
+# --------------------------------------------------------------------------- #
+# incremental adjoint, FULL NEWTON form (paper eq. (5c) with all terms):
+#   -d_t lam~ - div(lam~ v + lam vt) = 0,  lam~(1) = -rho~(1)
+# In tau: d_tau lam~ + (-v).grad lam~ = lam~ div v + div(lam(t) vt).
+# Needs lam(t) at every slice (stored by newton_state) and one spectral
+# divergence per step for the div(lam vt) source.
+# --------------------------------------------------------------------------- #
+def transport_inc_adjoint_newton(
+    lam1: jnp.ndarray,
+    lam_series: jnp.ndarray,  # (n_t+1, N..) in t-order
+    vtilde: jnp.ndarray,
+    plan: SLPlan,
+    spectral_ops,
+    interp=None,
+) -> jnp.ndarray:
+    interp = interp or _default_interp
+    dt = plan.dt
+    n_t = plan.n_t
+    divv = plan.divv  # None in incompressible mode
+
+    # div(lam(t_k) vt) on the grid, all slices in one batched spectral call
+    lam_vt = lam_series[:, None] * vtilde[None]  # (n_t+1, 3, N..)
+    spec = spectral_ops.fft.fwd(lam_vt)
+    div_lam_vt = sum(
+        spectral_ops.fft.inv(1j * k * spec[:, i]) for i, k in enumerate(spectral_ops.fft.kd)
+    )  # (n_t+1, N..)
+
+    def source(lam_t, k):
+        f = div_lam_vt[k]
+        if divv is not None:
+            f = f + lam_t * divv
+        return f
+
+    def step(carry, j):
+        lamt = carry
+        k = n_t - j  # current t-index (tau_j = 1 - t)
+        f0 = source(lamt, k)
+        lam0X = interp(lamt, plan.disp_adj)
+        f0X = interp(f0, plan.disp_adj)
+        lam_star = lam0X + dt * f0X
+        f_star = source(lam_star, k - 1)
+        nxt = lam0X + 0.5 * dt * (f0X + f_star)
+        return nxt, nxt
+
+    _, series_tau = jax.lax.scan(step, lam1, jnp.arange(n_t))
+    series = jnp.concatenate([lam1[None], series_tau], axis=0)
+    return series[::-1]  # t-order
+
+
+def transport_inc_state_series(
+    vtilde: jnp.ndarray, grad_rho_series: jnp.ndarray, plan: SLPlan, interp=None
+) -> jnp.ndarray:
+    """Like transport_inc_state but returns ALL slices (full Newton needs
+    grad rho~(t_k) for the second b~ term)."""
+    interp = interp or _default_interp
+    dt = plan.dt
+    rho0 = jnp.zeros_like(grad_rho_series[0, 0])
+
+    def source(k):
+        return -jnp.sum(vtilde * grad_rho_series[k], axis=0)
+
+    def step(carry, k):
+        rt = carry
+        f0 = source(k)
+        rt0X = interp(rt, plan.disp_fwd)
+        f0X = interp(f0, plan.disp_fwd)
+        f_star = source(k + 1)
+        nxt = rt0X + 0.5 * dt * (f0X + f_star)
+        return nxt, nxt
+
+    _, series = jax.lax.scan(step, rho0, jnp.arange(plan.n_t))
+    return jnp.concatenate([rho0[None], series], axis=0)
+
+
+# --------------------------------------------------------------------------- #
+# time quadrature:  b = int_0^1 lam(t) grad rho(t) dt   (trapezoidal)
+# --------------------------------------------------------------------------- #
+def time_integral_b(lam_series: jnp.ndarray, grad_rho_series: jnp.ndarray, dt: float) -> jnp.ndarray:
+    """lam_series (n_t+1, N..), grad_rho_series (n_t+1, 3, N..) -> (3, N..)."""
+    n = lam_series.shape[0]
+    w = jnp.full((n,), dt, dtype=jnp.float32).at[0].mul(0.5).at[-1].mul(0.5)
+    return jnp.einsum("t,txyz,tcxyz->cxyz", w, lam_series, grad_rho_series)
+
+
+# --------------------------------------------------------------------------- #
+# deformation map (1): d_t y + v.grad y = 0, y(x,0) = x.
+# Solved for the periodic displacement u = y - x:
+#   d_t u + v.grad u = -v,  u(0) = 0.
+# --------------------------------------------------------------------------- #
+def deformation_displacement(v: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
+    """Returns u(1) (3, N1,N2,N3) in *physical* units; y1 = x + u."""
+    interp = interp or _default_interp
+    dt = plan.dt
+    u0 = jnp.zeros_like(v)
+
+    def comp_step(u_c, f_c):
+        u0X = interp(u_c, plan.disp_fwd)
+        f0X = interp(f_c, plan.disp_fwd)
+        return u0X + 0.5 * dt * (f0X + f_c)  # f is time-independent (-v)
+
+    def step(u, _):
+        nxt = jnp.stack([comp_step(u[i], -v[i]) for i in range(3)])
+        return nxt, None
+
+    u1, _ = jax.lax.scan(step, u0, None, length=plan.n_t)
+    return u1

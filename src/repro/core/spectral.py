@@ -1,0 +1,208 @@
+"""Spectral (Fourier) differential operators on the periodic grid.
+
+Everything the paper applies in Fourier space (§III-B1): gradients,
+divergence, Laplacian, biharmonic ``Lap^2`` (regularization), their inverses
+(preconditioner ``(beta Lap^2)^{-1}``), the Leray projection
+``P = I - grad Lap^{-1} div`` that eliminates the incompressibility
+constraint, and the Gaussian smoothing applied to input images.
+
+All operators are diagonal scalings of the FFT coefficients, so each costs a
+forward transform, an O(N^3) scaling, and an inverse transform.  The
+``FFTBackend`` abstraction lets the same operator definitions run on a single
+device (``LocalFFT``: rfft) or on the production mesh
+(``repro.dist.pencil_fft.PencilFFT``: the paper's pencil-decomposed parallel
+FFT expressed with ``shard_map`` + ``lax.all_to_all``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import Grid
+
+
+class LocalFFT:
+    """Single-device backend: real FFT over the last three axes."""
+
+    def __init__(self, grid: Grid):
+        self.grid = grid
+        k1, k2, k3 = grid.k_grids(rfft_last=True)
+        d1, d2, d3 = grid.k_deriv(rfft_last=True)
+        f32 = np.float32
+        self.k = (k1.astype(f32), k2.astype(f32), k3.astype(f32))
+        self.kd = (d1.astype(f32), d2.astype(f32), d3.astype(f32))
+        self.ksq = (k1**2 + k2**2 + k3**2).astype(f32)
+        self.ksq_d = (d1**2 + d2**2 + d3**2).astype(f32)
+
+    def fwd(self, u: jnp.ndarray) -> jnp.ndarray:
+        return jnp.fft.rfftn(u, axes=(-3, -2, -1))
+
+    def inv(self, spec: jnp.ndarray) -> jnp.ndarray:
+        n = self.grid.shape
+        return jnp.fft.irfftn(spec, s=n, axes=(-3, -2, -1)).astype(self.grid.dtype)
+
+
+class SpectralOps:
+    """Paper's spectral operator toolbox over a pluggable FFT backend."""
+
+    def __init__(self, grid: Grid, backend=None):
+        self.grid = grid
+        self.fft = backend if backend is not None else LocalFFT(grid)
+
+    def _inv_real(self, spec: jnp.ndarray) -> jnp.ndarray:
+        """Inverse transform of real-destined spectra; uses the backend's
+        complex-packed inverse (PencilFFT(packed=True)) when available —
+        halves inverse-side all-to-all bytes (EXPERIMENTS §Perf)."""
+        if getattr(self.fft, "packed", False) and spec.ndim > 3:
+            lead = spec.shape[:-3]
+            flat = spec.reshape((-1,) + spec.shape[-3:])
+            out = self.fft.inv_packed(flat)
+            return out.reshape(lead + out.shape[-3:])
+        return self.fft.inv(spec)
+
+    # ------------------------------------------------------------------ #
+    # first-order operators (Nyquist-zeroed wavenumbers, skew-adjoint)
+    # ------------------------------------------------------------------ #
+    def grad(self, f: jnp.ndarray) -> jnp.ndarray:
+        """grad f: (..., N1,N2,N3) -> (3, ..., N1,N2,N3).
+
+        One forward FFT, three diagonal scalings, a *batched* inverse FFT —
+        the paper's §III-C1 optimization to avoid three full 3-D round trips.
+        """
+        spec = self.fft.fwd(f)
+        stacked = jnp.stack([1j * k * spec for k in self.fft.kd], axis=0)
+        return self._inv_real(stacked)
+
+    def div(self, v: jnp.ndarray) -> jnp.ndarray:
+        """div v: (3, N1,N2,N3) -> (N1,N2,N3)."""
+        spec = self.fft.fwd(v)  # batched over the component axis
+        out = sum(1j * k * spec[i] for i, k in enumerate(self.fft.kd))
+        return self.fft.inv(out)
+
+    # ------------------------------------------------------------------ #
+    # even-order elliptic operators (full wavenumbers)
+    # ------------------------------------------------------------------ #
+    def laplacian(self, f: jnp.ndarray) -> jnp.ndarray:
+        return self.fft.inv(-self.fft.ksq * self.fft.fwd(f))
+
+    def biharmonic(self, f: jnp.ndarray) -> jnp.ndarray:
+        return self.fft.inv(self.fft.ksq**2 * self.fft.fwd(f))
+
+    def inv_laplacian(self, f: jnp.ndarray) -> jnp.ndarray:
+        """Lap^{-1} with the zero mean mode mapped to zero."""
+        scale = jnp.where(self.fft.ksq > 0, -1.0 / jnp.maximum(self.fft.ksq, 1e-30), 0.0)
+        return self.fft.inv(scale * self.fft.fwd(f))
+
+    def inv_biharmonic(self, f: jnp.ndarray, zero_mode: float = 0.0) -> jnp.ndarray:
+        ksq = self.fft.ksq
+        scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq**2, 1e-30), zero_mode)
+        return self.fft.inv(scale * self.fft.fwd(f))
+
+    # ------------------------------------------------------------------ #
+    # Leray projection: P = I - grad Lap^{-1} div  (paper eq. (4))
+    # ------------------------------------------------------------------ #
+    def leray(self, v: jnp.ndarray) -> jnp.ndarray:
+        """Project a velocity onto the divergence-free subspace.
+
+        In Fourier space ``P_ij = delta_ij - k_i k_j / |k|^2``.  We use the
+        Nyquist-zeroed ``k`` in both numerator and denominator so that
+        ``P`` is an exact projection (P^2 = P) and ``div(P v) = 0`` exactly
+        in the discrete spectral sense.  The k=0 (mean-velocity) mode is
+        untouched: a constant field is divergence free.
+        """
+        spec = self.fft.fwd(v)  # (3, ...)
+        kd = self.fft.kd
+        ksq = self.fft.ksq_d
+        kdotv = sum(k * spec[i] for i, k in enumerate(kd))
+        inv = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq, 1e-30), 0.0)
+        proj = jnp.stack([spec[i] - kd[i] * inv * kdotv for i in range(3)], axis=0)
+        return self.fft.inv(proj)
+
+    # ------------------------------------------------------------------ #
+    # regularization operator A = beta Lap^2 and spectral preconditioner
+    # ------------------------------------------------------------------ #
+    def reg_apply(self, v: jnp.ndarray, beta) -> jnp.ndarray:
+        """beta * Lap^2 v  (H^2 seminorm regularization, paper eq. (2a))."""
+        return self.fft.inv(beta * self.fft.ksq**2 * self.fft.fwd(v))
+
+    def precond_apply(self, r: jnp.ndarray, beta) -> jnp.ndarray:
+        """(beta Lap^2)^{-1} r — the paper's spectral preconditioner.
+
+        Singular at k=0; the mean mode is passed through unchanged (there
+        the Hessian is dominated by the data term, which is O(1)).
+        """
+        ksq = self.fft.ksq
+        scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(beta * ksq**2, 1e-30), 1.0)
+        return self.fft.inv(scale * self.fft.fwd(r))
+
+    # ------------------------------------------------------------------ #
+    # fused elliptic ops (beyond-paper; EXPERIMENTS §Perf)
+    #
+    # The paper applies A = beta Lap^2 and the Leray projection as separate
+    # spectral round trips (12 c2c-equivalent 1-D transform batches per
+    # gradient/Hessian assembly).  Both are diagonal (resp. 3x3-block
+    # diagonal) in k-space, so one batched forward over [a, b], a k-space
+    # combine, and ONE batched inverse computes  beta Lap^2 a + P b  in 9 —
+    # a 25% cut of the elliptic FFT count; the fused preconditioner
+    # P (beta Lap^2)^{-1} halves its round trips (12 -> 6).
+    # ------------------------------------------------------------------ #
+    def _leray_spec(self, spec):
+        """Apply P in k-space to a (3, ...) spectrum."""
+        kd = self.fft.kd
+        ksq = self.fft.ksq_d
+        kdotv = sum(k * spec[i] for i, k in enumerate(kd))
+        inv = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq, 1e-30), 0.0)
+        return jnp.stack([spec[i] - kd[i] * inv * kdotv for i in range(3)], axis=0)
+
+    def reg_plus_project(self, a: jnp.ndarray, b: jnp.ndarray, beta, incompressible: bool):
+        """beta Lap^2 a + P b  (P = I when not incompressible) — one batched
+        forward over the 6 stacked components, one batched inverse over 3."""
+        spec = self.fft.fwd(jnp.stack([a, b], axis=0))  # (2, 3, k...)
+        sa, sb = spec[0], spec[1]
+        if incompressible:
+            sb = self._leray_spec(sb)
+        return self._inv_real(beta * self.fft.ksq**2 * sa + sb)
+
+    def precond_project(self, r: jnp.ndarray, beta, incompressible: bool) -> jnp.ndarray:
+        """P (beta Lap^2)^{-1} r in a single spectral round trip."""
+        ksq = self.fft.ksq
+        scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(beta * ksq**2, 1e-30), 1.0)
+        spec = scale * self.fft.fwd(r)
+        if incompressible:
+            spec = self._leray_spec(spec)
+        return self._inv_real(spec)
+
+    # ------------------------------------------------------------------ #
+    # image preprocessing (paper §III-B1)
+    # ------------------------------------------------------------------ #
+    def smooth(self, f: jnp.ndarray, sigma=None) -> jnp.ndarray:
+        """Gaussian spectral filter; default bandwidth = one grid cell."""
+        if sigma is None:
+            sigma = self.grid.spacing
+        if np.isscalar(sigma):
+            sigma = (sigma, sigma, sigma)
+        k1, k2, k3 = self.fft.k
+        expo = -0.5 * ((k1 * sigma[0]) ** 2 + (k2 * sigma[1]) ** 2 + (k3 * sigma[2]) ** 2)
+        return self.fft.inv(jnp.exp(expo) * self.fft.fwd(f))
+
+    # ------------------------------------------------------------------ #
+    # diagnostics
+    # ------------------------------------------------------------------ #
+    def reg_energy(self, v: jnp.ndarray, beta) -> jnp.ndarray:
+        """beta/2 ||Lap v||^2 via real-space quadrature (mesh independent)."""
+        lap_v = self.fft.inv(-self.fft.ksq * self.fft.fwd(v))
+        return 0.5 * beta * self.grid.norm_sq(lap_v)
+
+    def jacobian_det(self, disp: jnp.ndarray) -> jnp.ndarray:
+        """det(grad y) for y = x + u given displacement u (3,N1,N2,N3).
+
+        grad u is computed spectrally; det(I + grad u) pointwise.
+        """
+        g = jnp.swapaxes(self.grad(disp), 0, 1)  # g[i,j] = d_j u_i, one batched FFT
+        a = g + jnp.eye(3, dtype=g.dtype)[:, :, None, None, None]
+        det = (
+            a[0, 0] * (a[1, 1] * a[2, 2] - a[1, 2] * a[2, 1])
+            - a[0, 1] * (a[1, 0] * a[2, 2] - a[1, 2] * a[2, 0])
+            + a[0, 2] * (a[1, 0] * a[2, 1] - a[1, 1] * a[2, 0])
+        )
+        return det

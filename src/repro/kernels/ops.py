@@ -1,0 +1,70 @@
+"""Jitted dispatch layer over the interpolation kernels.
+
+``method="auto"`` picks the Pallas kernel on TPU when the semi-Lagrangian
+displacement bound fits the halo budget, and the pure-jnp oracle elsewhere
+(CPU/GPU, or when the planner reports an unbounded displacement).  On this
+CPU container the Pallas path runs in interpret mode (correctness only) —
+the solver keeps the oracle path hot so wall-clock tests stay fast.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.tricubic import tricubic_displace_pallas
+
+
+def _pick_tile(shape: tuple[int, int, int]) -> tuple[int, int, int] | None:
+    def best(n, cands):
+        for c in cands:
+            if n % c == 0:
+                return c
+        return None
+
+    t1 = best(shape[0], (8, 4, 2, 1))
+    t2 = best(shape[1], (8, 4, 2, 1))
+    t3 = best(shape[2], (64, 32, 16, 8))
+    if t3 is None:
+        return None
+    return (t1, t2, t3)
+
+
+def tricubic_displace(
+    field: jnp.ndarray,
+    disp: jnp.ndarray,
+    *,
+    method: str = "auto",
+    halo: int = 4,
+    tile: tuple[int, int, int] | None = None,
+) -> jnp.ndarray:
+    """field (N1,N2,N3) sampled at x + disp; disp (3,N1,N2,N3), grid units."""
+    if method == "auto":
+        method = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if method == "ref":
+        return ref.tricubic_displace(field, disp)
+    tile = tile or _pick_tile(field.shape)
+    if tile is None:
+        return ref.tricubic_displace(field, disp)
+    interpret = jax.default_backend() != "tpu"
+    return tricubic_displace_pallas(field, disp, tile=tile, halo=halo, interpret=interpret)
+
+
+def tricubic_displace_vec(field: jnp.ndarray, disp: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Vector/stacked fields: (C, N1,N2,N3)."""
+    return jax.vmap(lambda f: tricubic_displace(f, disp, **kw))(field)
+
+
+def tricubic_points(field: jnp.ndarray, coords: jnp.ndarray, chunk: int | None = None) -> jnp.ndarray:
+    """Arbitrary (unbounded) query points — oracle path only."""
+    if chunk:
+        return ref.tricubic_points_chunked(field, coords, chunk)
+    return ref.tricubic_points(field, coords)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def max_displacement(disp: jnp.ndarray) -> jnp.ndarray:
+    """Per-axis max |disp| in grid units — the planner's halo requirement."""
+    return jnp.max(jnp.abs(disp))

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused spectral diagonal scaling (complex-as-planes).
+
+The paper applies every elliptic operator as a diagonal scaling between the
+forward and inverse FFT (§III-B1).  On TPU the spectrum lives as two real
+planes (re, im) — a *real* diagonal symbol (biharmonic beta*k^4 here)
+applies to both planes identically, and one VPU kernel can emit several
+symbols in a single HBM pass:
+
+    out_c = beta_c * |k|^4 * spec      (c = 1..n_out)
+
+the k-space half of the fused ``reg_plus_project`` optimization
+(EXPERIMENTS §Perf R1) as an explicit kernel: one spectrum read + n_out
+writes instead of n_out full round trips.  Tiled over the (k2, k3) plane;
+wavenumbers are rebuilt in-kernel from broadcasted iotas (fftfreq
+convention), so no k-grid arrays stream from HBM at all.  Validated in
+interpret mode against the numpy-built k-grids (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(re_ref, im_ref, out_re_ref, out_im_ref, *, n1, n2, n3, tile, betas):
+    i, j = pl.program_id(0), pl.program_id(1)
+    t2, t3 = tile
+    idx2 = i * t2 + jax.lax.broadcasted_iota(jnp.float32, (t2, t3), 0)
+    idx3 = j * t3 + jax.lax.broadcasted_iota(jnp.float32, (t2, t3), 1)
+    # fftfreq convention: 0..ceil(N/2)-1, then negative frequencies
+    k2 = jnp.where(idx2 < (n2 + 1) // 2, idx2, idx2 - n2)
+    k3 = jnp.where(idx3 < (n3 + 1) // 2, idx3, idx3 - n3)
+    re = re_ref[...]  # (n1, t2, t3)
+    im = im_ref[...]
+    for c, beta in enumerate(betas):
+        for k1i in range(n1):  # unrolled: k1 is a compile-time constant
+            k1 = float(k1i) if k1i < (n1 + 1) // 2 else float(k1i - n1)
+            ksq = k1 * k1 + k2 * k2 + k3 * k3
+            sym = (beta * ksq * ksq).astype(jnp.float32)
+            out_re_ref[c, k1i] = re[k1i] * sym
+            out_im_ref[c, k1i] = im[k1i] * sym
+
+
+@functools.partial(jax.jit, static_argnames=("betas", "tile", "interpret"))
+def biharmonic_scale_pallas(
+    spec_re: jnp.ndarray,  # (N1, N2, N3) f32 — real plane of the spectrum
+    spec_im: jnp.ndarray,
+    betas: tuple[float, ...] = (1.0,),
+    tile: tuple[int, int] = (8, 128),
+    interpret: bool = False,
+):
+    """Apply ``beta_c * |k|^4`` for every beta in one pass.
+
+    Returns (out_re, out_im), each (len(betas), N1, N2, N3).
+    """
+    n1, n2, n3 = spec_re.shape
+    t2, t3 = tile
+    assert n2 % t2 == 0 and n3 % t3 == 0, (spec_re.shape, tile)
+    kern = functools.partial(_kernel, n1=n1, n2=n2, n3=n3, tile=tile, betas=betas)
+    grid = (n2 // t2, n3 // t3)
+    c = len(betas)
+    out_shape = [
+        jax.ShapeDtypeStruct((c, n1, n2, n3), jnp.float32),
+        jax.ShapeDtypeStruct((c, n1, n2, n3), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n1, t2, t3), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n1, t2, t3), lambda i, j: (0, i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, n1, t2, t3), lambda i, j: (0, 0, i, j)),
+            pl.BlockSpec((c, n1, t2, t3), lambda i, j: (0, 0, i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(spec_re, spec_im)

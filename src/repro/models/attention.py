@@ -1,0 +1,201 @@
+"""Attention block: GQA/MQA, RoPE/M-RoPE, qk-norm, sliding windows, caches.
+
+Covers every assigned attention flavor:
+  * gemma-7b      — 16 heads / 16 kv, head_dim 256, GeGLU
+  * gemma3-1b     — 4 heads / 1 kv, 5:1 local(window):global pattern
+  * minitron-4b   — 24/8 GQA, squared-ReLU MLP
+  * qwen3-*       — GQA + per-head RMS qk-norm
+  * qwen2-vl-72b  — 64/8 GQA + 3-section M-RoPE
+  * moonshot/qwen3-moe — GQA + MoE MLPs
+  * zamba2        — shared transformer block over a Mamba2 backbone
+  * seamless      — enc-dec (self + cross attention)
+
+Decode caches: full-length for global layers, **ring buffers bounded by
+the window** for sliding-window layers (this is what makes gemma3-1b's
+long_500k cell cheap: 25/30 of its layers cache only 1024 positions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, ShardRules, apply_rope, rms_norm
+
+NEG_INF = -2.0e38
+
+
+def attn_init(cfg: ArchConfig, key, rules: ShardRules, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d**-0.5
+    params = {
+        "wq": (jax.random.normal(k1, (d, h, hd)) * s).astype(cfg.dtype),
+        "wk": (jax.random.normal(k2, (d, kv, hd)) * s).astype(cfg.dtype),
+        "wv": (jax.random.normal(k3, (d, kv, hd)) * s).astype(cfg.dtype),
+        "wo": (jax.random.normal(k4, (h, hd, d)) * (h * hd) ** -0.5).astype(cfg.dtype),
+    }
+    specs = {
+        "wq": rules.spec(("fsdp", "heads", "head_dim"), (d, h, hd)),
+        "wk": rules.spec(("fsdp", "kv_heads", "head_dim"), (d, kv, hd)),
+        "wv": rules.spec(("fsdp", "kv_heads", "head_dim"), (d, kv, hd)),
+        "wo": rules.spec(("heads", "head_dim", "fsdp"), (h, hd, d)),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        params["k_norm"] = jnp.zeros((hd,), jnp.float32)
+        specs["q_norm"] = P(None)
+        specs["k_norm"] = P(None)
+    return params, specs
+
+
+def _qkv(cfg: ArchConfig, p: dict, x: jnp.ndarray, positions, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _block_local_attention(cfg: ArchConfig, p, q, k, v, window: int):
+    """Sliding-window attention in O(S * 2w) instead of dense O(S^2).
+
+    Beyond-paper §Perf optimization (hillclimb on gemma3-1b): the sequence
+    is cut into window-sized blocks; block i attends to blocks {i-1, i}
+    with the exact causal-window mask, which covers every (q, kv) pair with
+    q - w < kv <= q.  Identical output to the dense path (tested).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    w = window
+    nb = s // w  # caller guarantees divisibility
+    qb = q.reshape(b, nb, w, h, hd)
+    pad = lambda t: jnp.concatenate([jnp.zeros_like(t[:, :1]), t], axis=1)
+    kb = k.reshape(b, nb, w, kvh, hd)
+    vb = v.reshape(b, nb, w, kvh, hd)
+    k2 = jnp.concatenate([pad(kb)[:, :-1], kb], axis=2)  # (b, nb, 2w, kvh, hd)
+    v2 = jnp.concatenate([pad(vb)[:, :-1], vb], axis=2)
+
+    qpos = jnp.arange(w)[:, None] + w  # query index within the 2w window
+    kpos = jnp.arange(2 * w)[None, :]
+    m = (kpos <= qpos) & (kpos > qpos - w)
+    first = jnp.arange(2 * w)[None, :] >= w  # block 0 has no left neighbor
+    mask = jnp.where(m, 0.0, NEG_INF).astype(jnp.float32)  # (w, 2w)
+    mask0 = jnp.where(m & first, 0.0, NEG_INF).astype(jnp.float32)
+    blk = jnp.arange(nb)
+    mask_nb = jnp.where((blk > 0)[:, None, None], mask[None], mask0[None])  # (nb,w,2w)
+
+    g = h // kvh
+    qg = qb.reshape(b, nb, w, kvh, g, hd)
+    scores = jnp.einsum("bnskgh,bntkh->bnkgst", qg, k2).astype(jnp.float32) * (hd**-0.5)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = scores + mask_nb[None, :, None, None, :, :]
+    wts = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnkgst,bntkh->bnskgh", wts, v2).reshape(b, s, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jnp.ndarray,  # (B,S,D)
+    positions: jnp.ndarray,
+    window: int | None = None,
+    kv_override: tuple | None = None,  # cross attention: (k, v, enc_mask)
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    if kv_override is None:
+        q, k, v = _qkv(cfg, p, x, positions)
+        if window is not None and s % window == 0 and s >= 2 * window:
+            return _block_local_attention(cfg, p, q, k, v, window)
+        t = s
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        m = kpos <= qpos
+        if window is not None:
+            m &= kpos > qpos - window
+        mask = jnp.where(m, 0.0, NEG_INF)[None].astype(jnp.float32)
+        mask = jnp.broadcast_to(mask, (b, s, t))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k, v, mask = kv_override  # encoder memory: no causal mask
+
+    bq, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(bq, sq, kvh, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * (hd**-0.5)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(bq, sq, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# --------------------------------------------------------------------------- #
+# decode-time cache
+# --------------------------------------------------------------------------- #
+def cache_init(cfg: ArchConfig, batch: int, max_len: int, window: int | None, rules: ShardRules):
+    """KV cache for one attention layer; ring-buffer when windowed."""
+    length = min(window, max_len) if window else max_len
+    kv, hd = cfg.n_kv, cfg.head_dim
+    shape = (batch, length, kv, hd)
+    spec = rules.spec(("batch", "cache_seq", "kv_heads", "head_dim"), shape)
+    cache = {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),  # absolute position per slot
+    }
+    specs = {"k": spec, "v": spec, "pos": P(None)}
+    return cache, specs
+
+
+def attention_decode(
+    cfg: ArchConfig,
+    p: dict,
+    x: jnp.ndarray,  # (B,1,D)
+    pos: jnp.ndarray,  # scalar int32 — current position
+    cache: dict,
+    window: int | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions, (3, b, 1))
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+
+    length = cache["k"].shape[1]
+    slot = jnp.mod(pos, length)  # ring-buffer write (full cache: slot == pos)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    slot_pos = cache["pos"].at[slot].set(pos)
+    cache = {"k": k, "v": v, "pos": slot_pos}
+
+    valid = slot_pos >= 0
+    if window is not None:
+        valid &= slot_pos > pos - window
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, :].astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, (b, 1, length))
+
+    kvh = k.shape[2]
+    h, hd = cfg.n_heads, cfg.head_dim
+    qg = q.reshape(b, 1, kvh, h // kvh, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * (hd**-0.5)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(b, 1, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache

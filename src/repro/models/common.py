@@ -1,0 +1,284 @@
+"""Shared LM machinery: configs, sharding-rule engine, layers.
+
+The 10 assigned architectures are expressed as one ``ArchConfig`` each
+(src/repro/configs/).  Parameters are plain nested dicts; every init
+function returns ``(params, specs)`` where ``specs`` mirrors the param tree
+with ``PartitionSpec`` leaves, produced through ``ShardRules`` — which
+checks mesh-divisibility per dimension and falls back to replication when
+a dim doesn't divide (e.g. gemma3-1b's 4 heads on a 16-way model axis),
+recording every fallback for the dry-run report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------- #
+# configuration
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | ssm | moe | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    # attention flavor
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mrope_sections: tuple[int, ...] | None = None  # qwen2-vl M-RoPE
+    sliding_window: int | None = None  # window size for "local" layers
+    layer_pattern: tuple[str, ...] = ("attn",)  # repeated; see blocks
+    attn_logit_softcap: float | None = None
+    embed_scale: bool = False  # gemma: embeddings * sqrt(d_model)
+    mlp: str = "swiglu"  # swiglu | geglu | relu2
+    tie_embeddings: bool = True
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch: str = "scatter"  # scatter | dense (exact; smoke tests)
+    moe_token_shard: int = 1  # dispatch groups per row (optimized: model size)
+
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+
+    # enc-dec (seamless)
+    enc_layers: int = 0
+
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    vocab_pad_multiple: int = 256
+    remat: bool = True
+    remat_policy: str = "full"  # full | dots (save matmul outputs: no replayed TP collectives)
+    scan_layers: bool = True  # False: unroll groups (depth-extrapolation probes)
+    # which logical axes FSDP-shards parameters ("fsdp" rule axis)
+    notes: str = ""
+
+    @property
+    def vocab_padded(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab + m - 1) // m * m
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.pattern_period == 0, (self.name, self.layer_pattern)
+        return self.n_layers // self.pattern_period
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), for 6ND roofline."""
+        d, v = self.d_model, self.vocab_padded
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d
+        per_pattern = 0
+        for kind in self.layer_pattern:
+            if kind in ("attn", "local", "global", "attn_moe", "shared"):
+                per_pattern += d * (self.n_heads + 2 * self.n_kv) * self.head_dim
+                per_pattern += self.n_heads * self.head_dim * d
+                if kind == "attn_moe":
+                    per_pattern += self.n_experts * 3 * d * self.d_ff + d * self.n_experts
+                else:
+                    mults = 3 if self.mlp in ("swiglu", "geglu") else 2
+                    per_pattern += mults * d * self.d_ff
+            elif kind == "mamba":
+                din, st, hd = self.d_inner, self.ssm_state, self.ssm_heads
+                per_pattern += d * (2 * din + 2 * st + hd) + din * d  # in/out proj
+                per_pattern += (din + 2 * st) * self.ssm_conv + 3 * hd + din
+        total += self.n_groups * per_pattern
+        if self.enc_layers:  # encoder stack + cross-attention in decoder
+            enc = self.enc_layers * (
+                d * (self.n_heads + 2 * self.n_kv) * self.head_dim
+                + self.n_heads * self.head_dim * d
+                + 3 * d * self.d_ff
+            )
+            cross = self.n_layers * (
+                d * (self.n_heads + 2 * self.n_kv) * self.head_dim + self.n_heads * self.head_dim * d
+            )
+            total += enc + cross
+        return total
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE counts top_k of n_experts."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d = self.d_model
+        expert_all = self.n_groups * self.n_experts * 3 * d * self.d_ff
+        expert_active = self.n_groups * self.top_k * 3 * d * self.d_ff
+        return self.param_count() - expert_all + expert_active
+
+
+# --------------------------------------------------------------------------- #
+# sharding-rule engine
+# --------------------------------------------------------------------------- #
+class ShardRules:
+    """Logical-axis -> mesh-axis mapping with divisibility fallback.
+
+    rules: dict logical-name -> mesh axis (str | tuple | None).
+    ``spec(("vocab","embed"), shape)`` returns a PartitionSpec where each
+    dim keeps its mesh axis only if the dim size divides the axis size;
+    otherwise the dim is replicated and the event is logged.
+    """
+
+    DEFAULT = {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "embed": None,
+        "fsdp": "data",  # ZeRO/FSDP parameter dim
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "moe_embed": "data",  # expert-weight d_model dim (baseline: FSDP-like)
+        "moe_ff": None,  # expert-weight d_ff dim (optimized profile: "data")
+        "layers": None,
+        "ssm_inner": "model",
+        "cache_seq": None,
+        "replicated": None,
+    }
+
+    def __init__(self, mesh, overrides: dict | None = None):
+        self.mesh = mesh
+        self.rules = dict(self.DEFAULT)
+        if overrides:
+            self.rules.update(overrides)
+        self.fallbacks: list[tuple[str, int, Any]] = []
+
+    def axis_size(self, axis) -> int:
+        if axis is None:
+            return 1
+        names = axis if isinstance(axis, tuple) else (axis,)
+        out = 1
+        for n in names:
+            out *= int(self.mesh.shape.get(n, 1))
+        return out
+
+    def _resolve(self, logical, dim_size: int):
+        axis = self.rules.get(logical)
+        if axis is None:
+            return None
+        # drop mesh axes absent from this mesh (e.g. "pod" on single-pod)
+        names = axis if isinstance(axis, tuple) else (axis,)
+        names = tuple(n for n in names if n in self.mesh.shape)
+        if not names:
+            return None
+        size = 1
+        for n in names:
+            size *= int(self.mesh.shape[n])
+        if dim_size % size != 0:
+            self.fallbacks.append((logical, dim_size, names))
+            return None
+        return names if len(names) > 1 else names[0]
+
+    def spec(self, logicals: tuple, shape: tuple) -> P:
+        assert len(logicals) == len(shape), (logicals, shape)
+        used: set = set()
+        entries = []
+        for lg, sz in zip(logicals, shape):
+            r = self._resolve(lg, sz)
+            # a mesh axis may appear at most once in a PartitionSpec
+            flat = r if isinstance(r, tuple) else ((r,) if r else ())
+            if any(a in used for a in flat):
+                r = None
+            else:
+                used.update(flat)
+            entries.append(r)
+        return P(*entries)
+
+
+# --------------------------------------------------------------------------- #
+# layers
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (B, S, H, hd)
+    positions: jnp.ndarray,  # (B, S) or (3, B, S) for M-RoPE
+    theta: float,
+    mrope_sections: tuple[int, ...] | None = None,
+) -> jnp.ndarray:
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))  # (hd/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    else:
+        # Qwen2-VL M-RoPE: the hd/2 frequency slots are split into
+        # (temporal, height, width) sections, each driven by its own
+        # position id.  Text tokens use (t, t, t) -> reduces to 1-D RoPE.
+        assert positions.ndim == 3 and sum(mrope_sections) == hd // 2
+        parts = []
+        start = 0
+        for sec, pos in zip(mrope_sections, positions):
+            parts.append(pos[..., None].astype(jnp.float32) * freqs[start : start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_apply(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    elif cfg.mlp == "relu2":  # nemotron/minitron squared-ReLU
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    else:
+        raise ValueError(cfg.mlp)
+    return h @ p["w_down"]
+
+
+def mlp_init(cfg: ArchConfig, key, rules: ShardRules, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d**-0.5
+    scale_out = f**-0.5
+    params, specs = {}, {}
+    if cfg.mlp in ("swiglu", "geglu"):
+        params["w_gate"] = (jax.random.normal(k1, (d, f)) * scale_in).astype(cfg.dtype)
+        specs["w_gate"] = rules.spec(("fsdp", "mlp"), (d, f))
+    params["w_up"] = (jax.random.normal(k2, (d, f)) * scale_in).astype(cfg.dtype)
+    specs["w_up"] = rules.spec(("fsdp", "mlp"), (d, f))
+    params["w_down"] = (jax.random.normal(k3, (f, d)) * scale_out).astype(cfg.dtype)
+    specs["w_down"] = rules.spec(("mlp", "fsdp"), (f, d))
+    return params, specs

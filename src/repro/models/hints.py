@@ -1,0 +1,47 @@
+"""Ambient-mesh activation-sharding hints.
+
+GSPMD occasionally picks a pathological strategy for ops whose natural
+sharding is ambiguous (our dry-run found it all-REDUCING MoE dispatch
+buffers over the data axis instead of all-to-all-ing them to the expert
+shards — 11 TB/chip/step on qwen3-moe).  ``constrain`` drops a
+``with_sharding_constraint`` when a mesh has been installed (the dry-run /
+launcher does this); in single-device tests it is a no-op.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def constrain(x, *spec_entries):
+    """with_sharding_constraint(x, P(*entries)) under the ambient mesh.
+
+    Entries referring to axes absent from the mesh are dropped; no mesh
+    installed -> identity.
+    """
+    if _MESH is None:
+        return x
+    cleaned = []
+    for e in spec_entries:
+        if e is None:
+            cleaned.append(None)
+            continue
+        names = e if isinstance(e, tuple) else (e,)
+        names = tuple(n for n in names if n in _MESH.shape)
+        # drop axes that don't divide this dim
+        cleaned.append(names if len(names) > 1 else (names[0] if names else None))
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*cleaned)))
+    except Exception:
+        return x  # non-divisible etc.: hint is best-effort

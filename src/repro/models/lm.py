@@ -1,0 +1,247 @@
+"""Decoder-only LM: pattern-grouped blocks, scan-over-layers, KV/SSM caches.
+
+One generic model covers 8 of the 10 assigned architectures via
+``cfg.layer_pattern`` (the remaining 2 — seamless enc-dec — live in
+encdec.py and reuse these blocks):
+
+    gemma-7b / minitron-4b / qwen3-1.7b / qwen2-vl-72b : ("attn",)
+    gemma3-1b  : ("local",)*5 + ("global",)      (5:1 sliding:full)
+    moonshot / qwen3-moe : ("attn_moe",)
+    mamba2-130m: ("mamba",)
+    zamba2-2.7b: ("shared",) + ("mamba",)*5      (shared-weight attn block)
+
+Layers are stacked **per pattern group** and applied with ``lax.scan`` so
+the HLO is O(1) in depth (compile-time essential for the 94-layer MoE and
+80-layer VLM dry-runs); ``jax.checkpoint`` remats each group.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import hints, mamba2, moe
+from repro.models.common import ArchConfig, ShardRules, mlp_apply, mlp_init, rms_norm
+
+ATTN_KINDS = ("attn", "local", "global", "attn_moe", "shared")
+
+
+def _window(cfg: ArchConfig, kind: str):
+    return cfg.sliding_window if kind == "local" else None
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def block_init(cfg: ArchConfig, kind: str, key, rules: ShardRules):
+    k1, k2 = jax.random.split(key)
+    if kind == "mamba":
+        p, s = mamba2.mamba_init(cfg, k1, rules)
+        return (
+            {"norm": jnp.zeros((cfg.d_model,), jnp.float32), "mamba": p},
+            {"norm": P(None), "mamba": s},
+        )
+    pa, sa = attn.attn_init(cfg, k1, rules)
+    if kind == "attn_moe":
+        pm, sm = moe.moe_init(cfg, k2, rules)
+    else:
+        pm, sm = mlp_init(cfg, k2, rules)
+    params = {
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": pa,
+        "ln_mlp": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": pm,
+    }
+    specs = {"ln_attn": P(None), "attn": sa, "ln_mlp": P(None), "mlp": sm}
+    return params, specs
+
+
+def group_init(cfg: ArchConfig, key, rules: ShardRules):
+    params, specs = {}, {}
+    keys = jax.random.split(key, len(cfg.layer_pattern))
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == "shared":
+            continue  # shared block params live outside the scan stack
+        p, s = block_init(cfg, kind, keys[i], rules)
+        params[f"slot{i}"] = p
+        specs[f"slot{i}"] = s
+    return params, specs
+
+
+def init_params(cfg: ArchConfig, key, rules: ShardRules):
+    kE, kG, kS, kH = jax.random.split(key, 4)
+    vp, d = cfg.vocab_padded, cfg.d_model
+    params = {
+        "embed": (jax.random.normal(kE, (vp, d)) * d**-0.5).astype(cfg.dtype),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    specs = {
+        "embed": rules.spec(("vocab", "fsdp"), (vp, d)),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(kH, (d, vp)) * d**-0.5).astype(cfg.dtype)
+        specs["lm_head"] = rules.spec(("fsdp", "vocab"), (d, vp))
+
+    # stacked pattern groups (one init vmapped over groups)
+    gkeys = jax.random.split(kG, cfg.n_groups)
+    stacked = jax.vmap(lambda k: group_init(cfg, k, rules)[0])(gkeys)
+    _, gspecs = group_init(cfg, kG, rules)
+    params["groups"] = stacked
+    specs["groups"] = jax.tree.map(
+        lambda s: P(None, *s), gspecs, is_leaf=lambda s: isinstance(s, P)
+    )
+
+    if "shared" in cfg.layer_pattern:
+        p, s = block_init(cfg, "shared", kS, rules)
+        params["shared"] = p
+        specs["shared"] = s
+    return params, specs
+
+
+# --------------------------------------------------------------------------- #
+# forward (training / prefill)
+# --------------------------------------------------------------------------- #
+def block_apply(cfg: ArchConfig, kind: str, p: dict, x: jnp.ndarray, positions):
+    if kind == "mamba":
+        return x + mamba2.mamba_apply(cfg, p["mamba"], rms_norm(x, p["norm"], cfg.norm_eps))
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    x = x + attn.attention(cfg, p["attn"], h, positions, window=_window(cfg, kind))
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if kind == "attn_moe":
+        x = x + moe.moe_apply(cfg, p["mlp"], h)
+    else:
+        x = x + mlp_apply(cfg, p["mlp"], h)
+    return x
+
+
+def _embed(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, embeds=None):
+    x = params["embed"][tokens] if embeds is None else embeds.astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    return x
+
+
+def _logits(cfg: ArchConfig, params: dict, x: jnp.ndarray):
+    # logits stay in model dtype (f32 materialization at 256k vocab would
+    # double the dominant activation); the CE loss upcasts per-block.
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.vocab_padded != cfg.vocab:  # mask padding rows
+        pad = jnp.full((cfg.vocab_padded - cfg.vocab,), -1e30, logits.dtype)
+        logits = logits.at[..., cfg.vocab :].set(pad)
+    return logits
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, embeds=None) -> jnp.ndarray:
+    """tokens (B,S) int32 -> logits (B,S,Vp).  ``embeds`` overrides the
+    embedding lookup for modality-stub inputs (VLM patches / audio frames).
+    """
+    b, s = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.mrope_sections is not None:  # text-only: (t, t, t)
+        positions = jnp.broadcast_to(positions, (3, b, s))
+    x = _embed(cfg, params, tokens, embeds)
+    # §Perf: residual-stream pinning (batch over (pod,data), replicated on
+    # model).  NOT for MoE archs: their token-sharded dispatch wants tokens
+    # on the model axis too, and the conflicting constraints caused a
+    # per-layer reshard storm (qwen3-moe hillclimb iteration 2 — refuted).
+    pin = cfg.n_experts == 0
+    if pin:
+        x = hints.constrain(x, ("pod", "data"), None, None)
+
+    shared = params.get("shared")
+
+    def group_fn(carry, gparams):
+        h = hints.constrain(carry, ("pod", "data"), None, None) if pin else carry
+        for i, kind in enumerate(cfg.layer_pattern):
+            p = shared if kind == "shared" else gparams[f"slot{i}"]
+            h = block_apply(cfg, kind, p, h, positions)
+        return h, None
+
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.checkpoint_dots
+            if cfg.remat_policy == "dots"
+            else None
+        )
+        body = jax.checkpoint(group_fn, policy=policy)
+    else:
+        body = group_fn
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    else:  # unrolled (cost-analysis probes; see launch/dryrun.py)
+        for i in range(cfg.n_groups):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["groups"]))
+    return _logits(cfg, params, x)
+
+
+# --------------------------------------------------------------------------- #
+# serving: cache init + single-token decode
+# --------------------------------------------------------------------------- #
+def cache_init(cfg: ArchConfig, batch: int, max_len: int, rules: ShardRules):
+    caches, specs = {}, {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == "mamba":
+            c, s = mamba2.mamba_state_init(cfg, batch, rules)
+        else:
+            c, s = attn.cache_init(cfg, batch, max_len, _window(cfg, kind), rules)
+        caches[f"slot{i}"] = c
+        specs[f"slot{i}"] = s
+    # stack over groups
+    stack = lambda a: jnp.broadcast_to(a[None], (cfg.n_groups,) + a.shape)
+    caches = jax.tree.map(stack, caches)
+    specs = jax.tree.map(
+        lambda s: P(None, *s), specs, is_leaf=lambda s: isinstance(s, P)
+    )
+    return caches, specs
+
+
+def decode_step(cfg: ArchConfig, params: dict, token: jnp.ndarray, pos, caches):
+    """token (B,1) + caches -> (logits (B,1,Vp), new caches).  pos: int32."""
+    x = _embed(cfg, params, token)
+    shared = params.get("shared")
+
+    def group_fn(carry, scanned):
+        h = carry
+        gparams, gcache = scanned
+        new_cache = {}
+        for i, kind in enumerate(cfg.layer_pattern):
+            key = f"slot{i}"
+            p = shared if kind == "shared" else gparams[key]
+            if kind == "mamba":
+                hn = rms_norm(h, p["norm"], cfg.norm_eps)
+                out, new_cache[key] = mamba2.mamba_decode(cfg, p["mamba"], hn, gcache[key])
+                h = h + out
+            else:
+                hn = rms_norm(h, p["ln_attn"], cfg.norm_eps)
+                out, new_cache[key] = attn.attention_decode(
+                    cfg, p["attn"], hn, pos, gcache[key], window=_window(cfg, kind)
+                )
+                h = h + out
+                hn = rms_norm(h, p["ln_mlp"], cfg.norm_eps)
+                if kind == "attn_moe":
+                    h = h + moe.moe_apply(cfg, p["mlp"], hn)
+                else:
+                    h = h + mlp_apply(cfg, p["mlp"], hn)
+        return h, new_cache
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(group_fn, x, (params["groups"], caches))
+    else:  # unrolled (cost-analysis probes)
+        outs = []
+        for i in range(cfg.n_groups):
+            x, nc = group_fn(
+                x,
+                (
+                    jax.tree.map(lambda a: a[i], params["groups"]),
+                    jax.tree.map(lambda a: a[i], caches),
+                ),
+            )
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return _logits(cfg, params, x), new_caches

@@ -1,0 +1,147 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded dispatch.
+
+TPU adaptation note (DESIGN.md §5): MoE dispatch is the LM-side analogue of
+the paper's central obstacle — an irregular, data-dependent all-to-all.  We
+resolve it the same way the paper's interpolation was adapted: replace the
+dynamic alltoallv with a *statically bounded* exchange.  Tokens are grouped
+by data shard, ranked within their expert by an O(M log M) sort (not a
+T x E one-hot cumsum — memory), dropped beyond the per-group capacity
+``C = ceil(k * S_g / E * cf)``, and scattered into a dense ``(G, E, C, D)``
+buffer.  Expert matmuls are then regular einsums with experts sharded over
+the ``model`` axis (EP); GSPMD lowers the G<->E resharding to a static
+collective.  FLOPs stay proportional to *active* experts (top-k), which is
+what the roofline's ``6 N_active D`` model assumes.
+
+Two paths:
+  * ``dense``   — every expert on every token, mask-combined. Exact; used by
+                  smoke tests and as the oracle for the dispatch path.
+  * ``scatter`` — the production path described above (default).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, ShardRules
+
+
+def moe_init(cfg: ArchConfig, key, rules: ShardRules):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    params = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d**-0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * d**-0.5).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * d**-0.5).astype(cfg.dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * f**-0.5).astype(cfg.dtype),
+    }
+    specs = {
+        "router": rules.spec(("fsdp", "replicated"), (d, e)),
+        "w_gate": rules.spec(("experts", "moe_embed", "moe_ff"), (e, d, f)),
+        "w_up": rules.spec(("experts", "moe_embed", "moe_ff"), (e, d, f)),
+        "w_down": rules.spec(("experts", "moe_ff", "moe_embed"), (e, f, d)),
+    }
+    return params, specs
+
+
+def _routing(cfg: ArchConfig, p: dict, x: jnp.ndarray):
+    """x (..., D) -> (topk_idx (..., k), topk_w (..., k)) normalized."""
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return idx, w
+
+
+def moe_apply_dense(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Exact path: all experts on all tokens (oracle / small configs)."""
+    idx, w = _routing(cfg, p, x)  # (B,S,k)
+    gate = jnp.einsum("bsd,edf->bsef", x, p["w_gate"])
+    up = jnp.einsum("bsd,edf->bsef", x, p["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    y_all = jnp.einsum("bsef,efd->bsed", h, p["w_down"])  # (B,S,E,D)
+    mask = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32)  # (B,S,k,E)
+    comb = jnp.einsum("bske,bsk->bse", mask, w).astype(x.dtype)
+    return jnp.einsum("bsed,bse->bsd", y_all, comb)
+
+
+def _rank_in_expert(ids: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """ids (M,) int32 -> rank of each entry among same-expert entries.
+
+    Sort-based (O(M log M), O(M+E) memory): stable-sort by expert id; the
+    position within the sorted run is ``i - start[expert]``.
+    """
+    m = ids.shape[0]
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    counts = jnp.bincount(ids, length=n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(m, dtype=jnp.int32) - starts[sorted_ids].astype(jnp.int32)
+    return jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+
+
+def moe_apply_scatter(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Capacity-bounded dispatch path. x (B,S,D) -> (B,S,D).
+
+    Dispatch groups: ``cfg.moe_token_shard`` groups per batch row during
+    training (1 => row-per-group; >1 additionally shards tokens over the
+    model axis for dispatch — §Perf optimization: a2a payload per chip
+    drops by the model-axis size); the whole batch is one group during
+    decode (S=1) so capacity tracks *active* experts.
+
+    Structured as dispatch -> (sharding hint) -> expert FFN -> (hint) ->
+    combine so the group<->expert resharding lowers to an all-to-all
+    instead of GSPMD's default data-axis all-reduce (see hints.py).
+    """
+    from repro.models import hints
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    idx, w = _routing(cfg, p, x)  # (B,S,k)
+
+    sdiv = cfg.moe_token_shard if (s > 1 and s % max(cfg.moe_token_shard, 1) == 0) else 1
+    g = b * sdiv if s > 1 else 1
+    tpg = b * s // g  # tokens per dispatch group
+    cap = int(max(1, round(k * tpg / e * cfg.capacity_factor)))
+    xg_all = x.reshape(g, tpg, d)
+    idx_all = idx.reshape(g, tpg, k)
+    w_all = w.reshape(g, tpg, k)
+    grp_axes = ("pod", "data", "model") if sdiv > 1 else ("pod", "data")
+    xg_all = hints.constrain(xg_all, grp_axes, None, None)
+
+    m = tpg * k
+    toks = jnp.repeat(jnp.arange(tpg, dtype=jnp.int32), k)
+
+    def dispatch(xg, idxg):  # (T,D), (T,k) -> buf, keep, slot
+        ids = idxg.reshape(m)
+        ranks = _rank_in_expert(ids, e)
+        keep = ranks < cap
+        slot = jnp.where(keep, ids * cap + ranks, e * cap)  # overflow slot dropped
+        buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].add(xg[toks])
+        return buf, keep, slot
+
+    bufs, keeps, slots = jax.vmap(dispatch)(xg_all, idx_all)
+    bufs = bufs[:, :-1].reshape(g, e, cap, d)
+    # group->expert reshard: keep groups sharded; GSPMD routes to the
+    # expert-sharded weights with an all-to-all rather than an all-reduce
+    bufs = hints.constrain(bufs, grp_axes, None, None, None)
+
+    gate = jnp.einsum("gecd,edf->gecf", bufs, p["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", bufs, p["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"]).reshape(g, e * cap, d)
+    out = hints.constrain(out, grp_axes, None, None)
+
+    def combine(outg, keep, slot, wgr):  # back to token order, weighted
+        gathered = jnp.where(keep[:, None], outg[jnp.minimum(slot, e * cap - 1)], 0.0)
+        contrib = gathered * wgr.reshape(m)[:, None].astype(x.dtype)
+        return jnp.zeros((tpg, d), x.dtype).at[toks].add(contrib)
+
+    y = jax.vmap(combine)(out, keeps, slots, w_all)
+    return y.reshape(b, s, d)
+
+
+def moe_apply(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.moe_dispatch == "dense":
+        return moe_apply_dense(cfg, p, x)
+    return moe_apply_scatter(cfg, p, x)

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device; the
+multi-device checks live in test_dist.py and spawn subprocesses."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def single_mesh():
+    return jax.make_mesh((1,), ("data",))

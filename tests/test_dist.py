@@ -1,0 +1,195 @@
+"""Distributed-path equivalence, via subprocesses with 8 placeholder
+devices (XLA locks device count at first jax init, so these cannot run
+in-process with the rest of the suite)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str, devices: int = 8, timeout: int = 520):
+    code = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, {os.path.join(ROOT, "src")!r})
+        import jax, jax.numpy as jnp, numpy as np
+        """
+    ) + textwrap.dedent(body)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_pencil_fft_matches_local():
+    _run(
+        """
+        from repro.core.grid import make_grid
+        from repro.core.spectral import SpectralOps
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        grid = make_grid((16, 16, 32))
+        ctx = DistContext(grid, mesh, halo=2)
+        local = SpectralOps(grid)
+        rng = np.random.default_rng(0)
+        f = jnp.asarray(rng.standard_normal(grid.shape), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((3,)+grid.shape), jnp.float32)
+        fs, vs = ctx.shard_scalar(f), ctx.shard_vector(v)
+        for name, a, b in [
+            ("grad", ctx.ops.grad(fs), local.grad(f)),
+            ("div", ctx.ops.div(vs), local.div(v)),
+            ("leray", ctx.ops.leray(vs), local.leray(v)),
+            ("invbih", ctx.ops.inv_biharmonic(fs), local.inv_biharmonic(f)),
+        ]:
+            err = float(jnp.max(jnp.abs(a - b)))
+            assert err < 1e-3, (name, err)
+        """
+    )
+
+
+def test_halo_interp_matches_reference():
+    _run(
+        """
+        from repro.core.grid import make_grid
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        from repro.kernels import ref
+        mesh = make_mesh((2, 4), ("data", "model"))
+        grid = make_grid((16, 16, 32))
+        rng = np.random.default_rng(0)
+        f = jnp.asarray(rng.standard_normal(grid.shape), jnp.float32)
+        for halo in (1, 4, 9):  # 9 > shard width: multi-hop exchange
+            ctx = DistContext(grid, mesh, halo=halo)
+            d = jnp.asarray(rng.uniform(-halo+0.01, halo-0.01, (3,)+grid.shape), jnp.float32)
+            out = jax.jit(ctx.interp)(ctx.shard_scalar(f), jax.device_put(d, ctx.vector_sharding()))
+            err = float(jnp.max(jnp.abs(out - ref.tricubic_displace(f, d))))
+            assert err < 1e-4, (halo, err)
+        """
+    )
+
+
+def test_distributed_gn_iteration_matches_local():
+    _run(
+        """
+        from functools import partial
+        from repro.core.grid import make_grid
+        from repro.core.spectral import SpectralOps
+        from repro.core import objective as obj, gauss_newton as gn
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        from repro.data import synthetic
+        rho_R, rho_T, v_star, grid = synthetic.synthetic_problem(16)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        ctx = DistContext(grid, mesh, halo=4)
+        local = SpectralOps(grid)
+        cfg = gn.GNConfig()
+        prob_l = obj.Problem(grid, rho_R, rho_T, 1e-2, 4, False)
+        prob_d = obj.Problem(grid, ctx.shard_scalar(rho_R), ctx.shard_scalar(rho_T), 1e-2, 4, False)
+        v0 = jnp.zeros((3,)+grid.shape, jnp.float32)
+        vl, ll = jax.jit(partial(gn.newton_iteration, prob=prob_l, ops=local, cfg=cfg))(v0, jnp.float32(1))
+        vd, ld = jax.jit(partial(gn.newton_iteration, prob=prob_d, ops=ctx.ops, cfg=cfg, interp=ctx.interp))(
+            ctx.shard_vector(v0), jnp.float32(1))
+        assert float(jnp.max(jnp.abs(vl - vd))) < 1e-4
+        assert int(ll.cg_iters) == int(ld.cg_iters)
+        """
+    )
+
+
+def test_multipod_tuple_axis_pencil():
+    _run(
+        """
+        from functools import partial
+        from repro.core.grid import make_grid
+        from repro.core import objective as obj, gauss_newton as gn
+        from repro.core.spectral import SpectralOps
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        from repro.data import synthetic
+        rho_R, rho_T, v_star, grid = synthetic.synthetic_problem(16)
+        mesh = make_mesh((2,2,2), ("pod","data","model"))
+        ctx = DistContext(grid, mesh, axes=(("pod","data"),"model"), halo=4)
+        local = SpectralOps(grid)
+        cfg = gn.GNConfig()
+        prob_d = obj.Problem(grid, ctx.shard_scalar(rho_R), ctx.shard_scalar(rho_T), 1e-2, 4, False)
+        prob_l = obj.Problem(grid, rho_R, rho_T, 1e-2, 4, False)
+        v0 = jnp.zeros((3,)+grid.shape, jnp.float32)
+        vd, _ = jax.jit(partial(gn.newton_iteration, prob=prob_d, ops=ctx.ops, cfg=cfg, interp=ctx.interp))(
+            ctx.shard_vector(v0), jnp.float32(1))
+        vl, _ = jax.jit(partial(gn.newton_iteration, prob=prob_l, ops=local, cfg=cfg))(v0, jnp.float32(1))
+        assert float(jnp.max(jnp.abs(vl - vd))) < 1e-4
+        """
+    )
+
+
+def test_lm_train_step_shards_and_runs():
+    """Sharded smoke-model train step on a 2x2x2 pod mesh executes and
+    matches the single-device loss."""
+    _run(
+        """
+        from repro.configs import get_smoke_config
+        from repro.models.common import ShardRules
+        from repro.optim import adamw
+        from repro.train.steps import build_model, make_train_step
+        from repro.launch.mesh import make_mesh
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cfg = get_smoke_config("qwen3-1.7b")
+        model = build_model(cfg)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        rules = ShardRules(mesh)
+        params, specs = model.init(jax.random.PRNGKey(0), rules)
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_s = jax.tree.flatten(specs, is_leaf=lambda s: isinstance(s, P))[0]
+        params = tdef.unflatten([
+            jax.device_put(a, NamedSharding(mesh, s)) for a, s in zip(flat_p, flat_s)])
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)), jnp.int32)}
+        bsh = NamedSharding(mesh, P(("pod","data"), None))
+        batch_sharded = {k: jax.device_put(v, bsh) for k, v in batch.items()}
+        step = jax.jit(make_train_step(model, adamw.AdamWConfig()))
+        opt = adamw.init_state(params)
+        p2, o2, m = step(params, opt, batch_sharded)
+        assert np.isfinite(float(m["loss"]))
+
+        # single-device comparison
+        params1, _ = model.init(jax.random.PRNGKey(0), ShardRules(mesh))
+        step1 = jax.jit(make_train_step(model, adamw.AdamWConfig()))
+        _, _, m1 = step1(params1, adamw.init_state(params1), batch)
+        assert abs(float(m["loss"]) - float(m1["loss"])) < 1e-3
+        """
+    )
+
+
+def test_mini_dryrun_cell():
+    """The dry-run machinery end-to-end on 8 devices (8-chip 'production')."""
+    _run(
+        """
+        import repro.launch.dryrun as dr
+        from repro.launch import mesh as meshmod
+        # shrink the production mesh for the 8-device subprocess
+        meshmod.make_production_mesh = lambda multi_pod=False: (
+            jax.make_mesh((2,2,2), ("pod","data","model")) if multi_pod
+            else jax.make_mesh((2,4), ("data","model")))
+        dr.make_production_mesh = meshmod.make_production_mesh
+        import dataclasses
+        from repro.configs import get_smoke_config
+        import repro.configs as C
+        smoke = get_smoke_config("qwen3-1.7b")
+        smoke = dataclasses.replace(smoke, name="qwen3-1.7b")
+        C._MODULES["qwen3-1.7b"].config = lambda: smoke
+        rec = dr.lower_lm_cell("qwen3-1.7b", "train_4k", multi_pod=False, verbose=False)
+        assert rec["status"] == "ok", rec
+        assert rec["roofline"]["flops_per_chip"] > 0
+        rec2 = dr.lower_lm_cell("qwen3-1.7b", "decode_32k", multi_pod=True, verbose=False)
+        assert rec2["status"] == "ok", rec2
+        """
+    )

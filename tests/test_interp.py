@@ -1,0 +1,87 @@
+"""Tricubic interpolation: oracle properties + Pallas kernel parity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels import ops as kops
+from repro.kernels.tricubic import tricubic_displace_pallas
+
+
+def test_exact_at_grid_points(rng):
+    f = jnp.asarray(rng.standard_normal((8, 12, 16)), jnp.float32)
+    out = ref.tricubic_displace(f, jnp.zeros((3, 8, 12, 16)))
+    np.testing.assert_array_equal(out, f)
+
+
+def test_weights_partition_of_unity(rng):
+    t = jnp.asarray(rng.uniform(0, 1, 100), jnp.float32)
+    w = ref.lagrange_weights(t)
+    np.testing.assert_allclose(jnp.sum(w, axis=0), 1.0, atol=1e-6)
+
+
+def test_fourth_order_convergence(rng):
+    errs = []
+    for n in (16, 32):
+        h = 2 * np.pi / n
+        xs = np.arange(n) * h
+        x = np.stack(np.meshgrid(xs, xs, xs, indexing="ij"))
+        f = jnp.asarray(np.sin(x[0]) * np.cos(x[1]) + np.sin(x[2]), jnp.float32)
+        d = jnp.asarray(rng.uniform(-0.5, 0.5, (3, n, n, n)), jnp.float32)
+        out = ref.tricubic_displace(f, d)
+        q = x + np.asarray(d) * h
+        exact = np.sin(q[0]) * np.cos(q[1]) + np.sin(q[2])
+        errs.append(float(jnp.max(jnp.abs(out - exact))))
+    # 4th order: doubling N cuts error ~16x (allow slack for f32)
+    assert errs[0] / errs[1] > 8.0
+
+
+def test_periodic_wrap(rng):
+    f = jnp.asarray(rng.standard_normal((8, 8, 8)), jnp.float32)
+    d = jnp.ones((3, 8, 8, 8), jnp.float32) * 8.0  # exactly one period
+    np.testing.assert_allclose(ref.tricubic_displace(f, d), f, atol=1e-4)
+
+
+def test_chunked_matches_direct(rng):
+    f = jnp.asarray(rng.standard_normal((8, 8, 16)), jnp.float32)
+    q = jnp.asarray(rng.uniform(0, 8, (3, 333)), jnp.float32)
+    a = ref.tricubic_points(f, q)
+    b = ref.tricubic_points_chunked(f, q, chunk=64)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_vector_displace(rng):
+    f = jnp.asarray(rng.standard_normal((3, 8, 8, 16)), jnp.float32)
+    d = jnp.asarray(rng.uniform(-2, 2, (3, 8, 8, 16)), jnp.float32)
+    out = ref.tricubic_displace_vec(f, d)
+    for c in range(3):
+        np.testing.assert_allclose(out[c], ref.tricubic_displace(f[c], d), atol=1e-6)
+
+
+# ----------------------------------------------------------------------- #
+# Pallas kernel parity sweeps (interpret mode on CPU)
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("shape,tile", [
+    ((16, 16, 32), (8, 8, 16)),
+    ((8, 16, 64), (4, 8, 32)),
+    ((16, 8, 16), (8, 4, 16)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("halo", [2, 4])
+def test_pallas_matches_ref(rng, shape, tile, dtype, halo):
+    f = jnp.asarray(rng.standard_normal(shape), dtype)
+    d = jnp.asarray(rng.uniform(-halo + 0.1, halo - 0.1, (3,) + shape), jnp.float32)
+    out = tricubic_displace_pallas(f, d, tile=tile, halo=halo, interpret=True)
+    expect = ref.tricubic_displace(f.astype(jnp.float32), d)
+    tol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_ops_dispatcher_ref_path(rng):
+    f = jnp.asarray(rng.standard_normal((8, 8, 16)), jnp.float32)
+    d = jnp.asarray(rng.uniform(-1, 1, (3, 8, 8, 16)), jnp.float32)
+    a = kops.tricubic_displace(f, d, method="ref")
+    b = kops.tricubic_displace(f, d, method="auto")  # CPU -> ref
+    np.testing.assert_array_equal(a, b)

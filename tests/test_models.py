@@ -1,0 +1,170 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch runs a
+reduced-config forward + train step on CPU with shape/NaN assertions, and
+representative archs check decode-vs-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.models.common import ShardRules
+from repro.optim import adamw
+from repro.train.steps import build_model, make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, rng, b=2, s=16):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.enc_layers:
+        batch["frames"] = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    return batch
+
+
+def test_all_ten_archs_present():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_ff, cfg.vocab)
+    assert got == expected
+
+
+def test_moe_expert_counts():
+    m = get_config("moonshot-v1-16b-a3b")
+    q = get_config("qwen3-moe-235b-a22b")
+    assert (m.n_experts, m.top_k) == (64, 6)
+    assert (q.n_experts, q.top_k) == (128, 8)
+
+
+def test_param_counts_plausible():
+    assert 8.0e9 < get_config("gemma-7b").param_count() < 9.5e9
+    q = get_config("qwen3-moe-235b-a22b")
+    assert 2.0e11 < q.param_count() < 2.6e11
+    assert 1.5e10 < q.active_param_count() < 3.0e10
+    assert 1.0e8 < get_config("mamba2-130m").param_count() < 2.0e8
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train(arch, rng, single_mesh):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rules = ShardRules(single_mesh)
+    params, specs = model.init(jax.random.PRNGKey(0), rules)
+    # every param leaf has a matching spec leaf
+    from jax.sharding import PartitionSpec as P
+
+    n_p = len(jax.tree.leaves(params))
+    n_s = len(jax.tree.flatten(specs, is_leaf=lambda s: isinstance(s, P))[0])
+    assert n_p == n_s
+
+    batch = _batch(cfg, rng)
+    logits = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_padded)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+    step = jax.jit(make_train_step(model, adamw.AdamWConfig(warmup_steps=1)))
+    p2, o2, metrics = step(params, adamw.init_state(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    delta = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+        if a.dtype != jnp.int32
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize(
+    "arch", ["gemma-7b", "gemma3-1b", "mamba2-130m", "zamba2-2.7b", "qwen2-vl-72b"]
+)
+def test_decode_matches_forward(arch, rng, single_mesh):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rules = ShardRules(single_mesh)
+    params, _ = model.init(jax.random.PRNGKey(0), rules)
+    b, s = 2, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    full = model.forward(params, {"tokens": tokens})
+    caches, _ = model.cache_init(b, s, rules)
+    dec = jax.jit(model.decode)
+    outs = []
+    for t in range(s):
+        lg, caches = dec(params, tokens[:, t : t + 1], jnp.int32(t), caches)
+        outs.append(lg)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(got[..., : cfg.vocab], np.float32),
+        np.asarray(full[..., : cfg.vocab], np.float32),
+        atol=2e-4, rtol=1e-3,
+    )
+
+
+def test_moe_decode_matches_forward_dense_path(rng, single_mesh):
+    cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"), moe_dispatch="dense")
+    model = build_model(cfg)
+    rules = ShardRules(single_mesh)
+    params, _ = model.init(jax.random.PRNGKey(0), rules)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    full = model.forward(params, {"tokens": tokens})
+    caches, _ = model.cache_init(2, 8, rules)
+    outs = []
+    for t in range(8):
+        lg, caches = model.decode(params, tokens[:, t : t + 1], jnp.int32(t), caches)
+        outs.append(lg)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, axis=1), np.float32),
+        np.asarray(full, np.float32), atol=2e-4, rtol=1e-3,
+    )
+
+
+def test_sliding_window_restricts_attention(rng, single_mesh):
+    """gemma3 local layers: token attends at most `window` back."""
+    cfg = get_smoke_config("gemma3-1b")
+    model = build_model(cfg)
+    rules = ShardRules(single_mesh)
+    params, _ = model.init(jax.random.PRNGKey(0), rules)
+    s = 24  # window is 8 in the smoke config
+    t1 = jnp.asarray(rng.integers(0, cfg.vocab, (1, s)), jnp.int32)
+    t2 = t1.at[0, 0].set((int(t1[0, 0]) + 7) % cfg.vocab)  # perturb token 0
+    l1 = model.forward(params, {"tokens": t1})
+    l2 = model.forward(params, {"tokens": t2})
+    # with 2 local(w=8) + 1 global per group x2 groups the receptive field is
+    # bounded but wide; just assert the perturbation effect decays
+    early = float(jnp.max(jnp.abs(l1[0, 1] - l2[0, 1])))
+    late = float(jnp.max(jnp.abs(l1[0, -1] - l2[0, -1])))
+    assert early > late
+
+
+def test_seamless_encoder_is_bidirectional(rng, single_mesh):
+    cfg = get_smoke_config("seamless-m4t-large-v2")
+    from repro.models import encdec
+
+    model = build_model(cfg)
+    rules = ShardRules(single_mesh)
+    params, _ = model.init(jax.random.PRNGKey(0), rules)
+    frames = jnp.asarray(rng.standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    mem1 = encdec.encode(cfg, params, frames)
+    frames2 = frames.at[0, -1].add(1.0)  # perturb LAST frame
+    mem2 = encdec.encode(cfg, params, frames2)
+    # first position must change too (bidirectional)
+    assert float(jnp.max(jnp.abs(mem1[0, 0] - mem2[0, 0]))) > 1e-6

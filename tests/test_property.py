@@ -1,0 +1,98 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grid import make_grid
+from repro.core.spectral import SpectralOps
+from repro.data.tokens import batch_at_step
+from repro.kernels import ref
+from repro.models import moe
+
+_G = make_grid(8)
+_OPS = SpectralOps(_G)
+
+fields = st.integers(0, 2**31 - 1).map(
+    lambda s: jnp.asarray(np.random.default_rng(s).standard_normal((3,) + _G.shape), jnp.float32)
+)
+scalars = st.integers(0, 2**31 - 1).map(
+    lambda s: jnp.asarray(np.random.default_rng(s).standard_normal(_G.shape), jnp.float32)
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(v=fields)
+def test_leray_projection_idempotent(v):
+    pv = _OPS.leray(v)
+    np.testing.assert_allclose(_OPS.leray(pv), pv, atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(v=fields)
+def test_leray_output_divergence_free(v):
+    assert float(jnp.max(jnp.abs(_OPS.div(_OPS.leray(v))))) < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(f=scalars)
+def test_fft_roundtrip(f):
+    np.testing.assert_allclose(_OPS.fft.inv(_OPS.fft.fwd(f)), f, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(f=scalars)
+def test_interp_exact_at_grid_points(f):
+    out = ref.tricubic_displace(f, jnp.zeros((3,) + _G.shape))
+    np.testing.assert_array_equal(out, f)
+
+
+@settings(max_examples=15, deadline=None)
+@given(f=scalars, s=st.integers(0, 7))
+def test_interp_integer_shift_is_roll(f, s):
+    d = jnp.full((3,) + _G.shape, float(s))
+    out = ref.tricubic_displace(f, d)
+    np.testing.assert_allclose(out, jnp.roll(f, (-s, -s, -s), (0, 1, 2)), atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.floats(0, 1).map(lambda v: jnp.asarray([v], jnp.float32)))
+def test_lagrange_weights_sum_to_one(t):
+    np.testing.assert_allclose(jnp.sum(ref.lagrange_weights(t), axis=0), 1.0, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), ne=st.integers(2, 16))
+def test_rank_in_expert_is_valid_permutation_within_expert(seed, ne):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, ne, 64), jnp.int32)
+    ranks = np.asarray(moe._rank_in_expert(ids, ne))
+    for e in range(ne):
+        r = sorted(ranks[np.asarray(ids) == e])
+        assert r == list(range(len(r)))  # 0..count-1, each exactly once
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), step=st.integers(0, 1000))
+def test_token_stream_deterministic(seed, step):
+    a = batch_at_step(seed, step, 2, 8, 100)
+    b = batch_at_step(seed, step, 2, 8, 100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # next-token alignment
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(amp=st.floats(0.05, 0.6))
+def test_diffeomorphism_for_smooth_small_velocity(amp):
+    """Smooth velocities with bounded magnitude yield det(grad y) > 0."""
+    from repro.core import semilag
+    from repro.core.planner import make_plan
+    from repro.data.synthetic import paper_velocity
+
+    g = make_grid(16)
+    ops = SpectralOps(g)
+    v = paper_velocity(g, float(amp))
+    plan = make_plan(v, g, ops, 4, False)
+    u = semilag.deformation_displacement(v, plan)
+    assert float(jnp.min(ops.jacobian_det(u))) > 0.0

@@ -1,0 +1,90 @@
+"""End-to-end Gauss-Newton-Krylov registration (paper §IV behaviours)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gauss_newton as gn
+from repro.core.registration import RegistrationConfig, register
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def solved():
+    rho_R, rho_T, v_star, grid = synthetic.synthetic_problem(24)
+    cfg = RegistrationConfig(
+        solver=gn.GNConfig(beta=1e-2, n_t=4, max_newton=12, gtol=1e-2, max_cg=50)
+    )
+    out = register(rho_R, rho_T, cfg, grid=grid)
+    return out
+
+
+def test_gradient_reduced_to_paper_tolerance(solved):
+    """Paper: g_tol = 1e-2 relative gradient reduction (§IV-A3)."""
+    assert solved["history"][-1]["rel_gnorm"] <= 1e-2 + 1e-6
+
+
+def test_misfit_reduced(solved):
+    h = solved["history"]
+    assert h[-1]["misfit"] < 0.3 * h[0]["misfit"]
+
+
+def test_residual_reduced(solved):
+    assert solved["residual_rel"] < 0.7
+
+
+def test_deformation_is_diffeomorphic(solved):
+    """det(grad y1) > 0 everywhere (paper Fig. 7)."""
+    assert solved["det_min"] > 0.0
+
+
+def test_monotone_objective(solved):
+    js = [h["J"] for h in solved["history"]]
+    assert all(b <= a + 1e-6 for a, b in zip(js, js[1:]))
+
+
+def test_newton_mesh_independence():
+    """Paper §IV-B: Newton iteration counts are mesh-independent."""
+    iters = {}
+    for n in (16, 24):
+        rho_R, rho_T, _, grid = synthetic.synthetic_problem(n)
+        cfg = RegistrationConfig(
+            solver=gn.GNConfig(beta=1e-2, n_t=4, max_newton=20, gtol=1e-2, max_cg=50)
+        )
+        out = register(rho_R, rho_T, cfg, grid=grid)
+        iters[n] = out["newton_iters"]
+    assert abs(iters[16] - iters[24]) <= 2
+
+
+def test_incompressible_volume_preservation():
+    """div v = 0 => det(grad y) = 1 (locally volume preserving, §II-A)."""
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(16, incompressible=True, amplitude=0.5)
+    cfg = RegistrationConfig(
+        solver=gn.GNConfig(beta=1e-2, n_t=4, max_newton=8, gtol=1e-2, max_cg=30, incompressible=True)
+    )
+    out = register(rho_R, rho_T, cfg, grid=grid)
+    assert abs(out["det_min"] - 1.0) < 0.1 and abs(out["det_max"] - 1.0) < 0.1
+
+
+def test_beta_sensitivity_matvecs_increase():
+    """Paper Table V: smaller beta => more Hessian matvecs."""
+    counts = {}
+    for beta in (1e-1, 1e-3):
+        rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
+        cfg = RegistrationConfig(
+            solver=gn.GNConfig(beta=beta, n_t=4, max_newton=4, gtol=1e-3, max_cg=100)
+        )
+        out = register(rho_R, rho_T, cfg, grid=grid)
+        counts[beta] = out["hessian_matvecs"]
+    assert counts[1e-3] > counts[1e-1]
+
+
+def test_beta_continuation_warm_start():
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
+    cfg = RegistrationConfig(
+        solver=gn.GNConfig(
+            beta=1e-3, beta_continuation=(1e-1, 1e-2), n_t=4, max_newton=4, gtol=1e-2, max_cg=30
+        )
+    )
+    out = register(rho_R, rho_T, cfg, grid=grid)
+    assert out["residual_rel"] < 0.6
+    assert out["det_min"] > 0.0

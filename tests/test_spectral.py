@@ -1,0 +1,112 @@
+"""Spectral operator correctness (paper §III-B1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.grid import make_grid
+from repro.core.spectral import SpectralOps
+
+
+@pytest.fixture(scope="module")
+def ops32():
+    g = make_grid(32)
+    return g, SpectralOps(g)
+
+
+def test_gradient_analytic(ops32):
+    g, ops = ops32
+    x = g.coords_jnp()
+    f = jnp.sin(x[0]) * jnp.cos(2 * x[1]) + jnp.sin(3 * x[2])
+    gf = ops.grad(f)
+    exact = jnp.stack(
+        [
+            jnp.cos(x[0]) * jnp.cos(2 * x[1]),
+            -2 * jnp.sin(x[0]) * jnp.sin(2 * x[1]),
+            3 * jnp.cos(3 * x[2]),
+        ]
+    )
+    np.testing.assert_allclose(gf, exact, atol=1e-4)
+
+
+def test_divergence_analytic(ops32):
+    g, ops = ops32
+    x = g.coords_jnp()
+    v = jnp.stack([jnp.sin(x[0]), jnp.cos(x[1]), jnp.sin(2 * x[2])])
+    exact = jnp.cos(x[0]) - jnp.sin(x[1]) + 2 * jnp.cos(2 * x[2])
+    np.testing.assert_allclose(ops.div(v), exact, atol=1e-4)
+
+
+def test_laplacian_and_inverse(ops32):
+    g, ops = ops32
+    x = g.coords_jnp()
+    f = jnp.sin(x[0]) * jnp.cos(2 * x[1]) + jnp.sin(3 * x[2])
+    f0 = f - jnp.mean(f)
+    np.testing.assert_allclose(ops.inv_laplacian(ops.laplacian(f)), f0, atol=1e-4)
+
+
+def test_biharmonic_inverse_roundtrip(ops32, rng):
+    g, ops = ops32
+    f = ops.smooth(jnp.asarray(rng.standard_normal(g.shape), jnp.float32), 0.4)
+    f0 = f - jnp.mean(f)
+    np.testing.assert_allclose(ops.inv_biharmonic(ops.biharmonic(f)), f0, atol=1e-3)
+
+
+def test_leray_projection_divergence_free(ops32, rng):
+    g, ops = ops32
+    v = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    pv = ops.leray(v)
+    assert float(jnp.max(jnp.abs(ops.div(pv)))) < 1e-4
+
+
+def test_leray_idempotent_and_symmetric(ops32, rng):
+    g, ops = ops32
+    v = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    pv = ops.leray(v)
+    np.testing.assert_allclose(ops.leray(pv), pv, atol=2e-5)
+    # <Pv, w> == <v, Pw>
+    a = float(g.inner(pv, w))
+    b = float(g.inner(v, ops.leray(w)))
+    assert abs(a - b) < 1e-3 * max(abs(a), 1.0)
+
+
+def test_leray_keeps_divfree_field(ops32):
+    g, ops = ops32
+    x = g.coords_jnp()
+    v = jnp.stack([jnp.sin(x[1]), jnp.sin(x[2]), jnp.sin(x[0])])  # div-free
+    np.testing.assert_allclose(ops.leray(v), v, atol=1e-4)
+
+
+def test_precond_is_reg_inverse(ops32, rng):
+    g, ops = ops32
+    v = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    v0 = v - jnp.mean(v.reshape(3, -1), axis=1)[:, None, None, None]
+    out = ops.precond_apply(ops.reg_apply(v0, 1e-2), 1e-2)
+    # k^4 scaling amplifies f32 roundoff: condition ~ (N/2)^4
+    np.testing.assert_allclose(out, v0, atol=2e-3)
+
+
+def test_gaussian_smoothing_dc_preserving(ops32, rng):
+    g, ops = ops32
+    f = jnp.asarray(rng.standard_normal(g.shape), jnp.float32)
+    sf = ops.smooth(f)
+    assert abs(float(jnp.mean(sf) - jnp.mean(f))) < 1e-5
+    # smoothing reduces the H1 seminorm
+    gn = lambda a: float(g.norm_sq(ops.grad(a)))
+    assert gn(sf) < gn(f)
+
+
+def test_jacobian_det_identity_and_translation(ops32):
+    g, ops = ops32
+    u = jnp.zeros((3,) + g.shape, jnp.float32)
+    np.testing.assert_allclose(ops.jacobian_det(u), 1.0, atol=1e-5)
+    np.testing.assert_allclose(ops.jacobian_det(u + 0.3), 1.0, atol=1e-4)
+
+
+def test_jacobian_det_analytic(ops32):
+    g, ops = ops32
+    x = g.coords_jnp()
+    eps = 0.1
+    u = jnp.stack([eps * jnp.sin(x[0]), jnp.zeros(g.shape), jnp.zeros(g.shape)])
+    det = ops.jacobian_det(u)
+    np.testing.assert_allclose(det, 1.0 + eps * jnp.cos(x[0]), atol=1e-4)
