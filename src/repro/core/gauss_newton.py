@@ -186,15 +186,17 @@ def solve(
     v0: jnp.ndarray | None = None,
     verbose: bool = False,
     callback: Callable[[int, dict], None] | None = None,
+    interp=None,
 ):
     """Full registration drive: (optional) beta continuation + Newton loop.
 
     The per-iteration work is jit-compiled once per (grid, beta); the Python
-    loop handles convergence, logging, and checkpoint callbacks.
+    loop handles convergence, logging, and checkpoint callbacks.  On a mesh,
+    pass ``ops=ctx.ops, interp=ctx.interp`` from a ``DistContext``.
     """
     ops = ops or SpectralOps(grid)
     v = v0 if v0 is not None else jnp.zeros((3,) + grid.shape, grid.dtype)
-    interp = _interp_fn(cfg)
+    interp = interp or _interp_fn(cfg)
 
     betas = tuple(cfg.beta_continuation) + (cfg.beta,)
     history: list[dict] = []

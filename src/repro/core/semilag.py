@@ -6,8 +6,9 @@ which the Gauss-Newton Hessian needs (eq. (5) requires rho(t) at all t).
 
 Every solver takes an ``SLPlan`` (departure points computed once per
 velocity — paper's planner) and an ``interp`` callable so the same code
-runs single-device (oracle/Pallas kernels) and distributed (halo-exchange
-interpolation from repro.dist.halo).
+runs single-device (oracle/Pallas kernels via ``repro.kernels.ops``) and
+distributed (``repro.dist.halo.make_halo_interp``'s ghost-layer exchange,
+available pre-wired as ``DistContext.interp``).
 
 General scheme for  d_t nu + v . grad nu = f  (paper eq. (7)):
 

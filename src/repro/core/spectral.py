@@ -11,7 +11,11 @@ forward transform, an O(N^3) scaling, and an inverse transform.  The
 ``FFTBackend`` abstraction lets the same operator definitions run on a single
 device (``LocalFFT``: rfft) or on the production mesh
 (``repro.dist.pencil_fft.PencilFFT``: the paper's pencil-decomposed parallel
-FFT expressed with ``shard_map`` + ``lax.all_to_all``).
+FFT expressed with ``shard_map`` + ``lax.all_to_all``; wired up by
+``repro.dist.context.DistContext`` as ``ctx.ops``).  The backends may use
+different spectrum layouts (rfft vs full c2c) — operators only ever pair a
+backend's ``fwd``/``inv`` with that same backend's ``k``/``kd``/``ksq``
+grids, so the difference never leaks.
 """
 from __future__ import annotations
 

@@ -1,0 +1,19 @@
+"""Distributed-memory solver layer (paper §III-C, Fig. 4, Alg. 1).
+
+The paper's two communication-bound primitives, expressed as JAX SPMD
+programs over a 2-D device mesh:
+
+* ``repro.dist.pencil_fft.PencilFFT`` — the 2-D pencil-decomposed parallel
+  FFT (``shard_map`` + ``lax.all_to_all`` transposes), drop-in for
+  ``repro.core.spectral.LocalFFT``.
+* ``repro.dist.halo`` — ghost-layer (halo) exchange + local tricubic
+  interpolation for the semi-Lagrangian transport solves, the TPU analogue
+  of Algorithm 1's scatter phase.
+* ``repro.dist.context.DistContext`` — ties both to a concrete
+  (grid, mesh, axes, halo) choice and hands the solver sharded inputs.
+"""
+from repro.dist.context import DistContext
+from repro.dist.halo import make_halo_interp
+from repro.dist.pencil_fft import PencilFFT
+
+__all__ = ["DistContext", "PencilFFT", "make_halo_interp"]

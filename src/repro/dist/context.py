@@ -1,0 +1,65 @@
+"""DistContext: one object tying grid + mesh + pencil FFT + halo interp.
+
+Everything the solver needs to run distributed is derived from a
+``(grid, mesh, axes, halo)`` choice:
+
+    ctx = DistContext(grid, mesh, halo=8)            # single-pod 16x16
+    ctx = DistContext(grid, mesh,                     # multi-pod 2x16x16
+                      axes=(("pod", "data"), "model"), halo=8)
+
+    ops    = ctx.ops      # SpectralOps over the PencilFFT backend
+    interp = ctx.interp   # halo-exchange tricubic, plugs into semilag
+    v      = ctx.shard_vector(v); rho = ctx.shard_scalar(rho)
+
+``axes`` names the two pencil dimensions; tuple entries fold several mesh
+axes into one pencil dimension (the multi-pod layout treats pod x data as
+a single ``p1``).  The solver code itself (``core/gauss_newton.py``,
+``core/objective.py``, ``core/semilag.py``) is layout-agnostic — it only
+ever sees ``ctx.ops`` and ``ctx.interp``.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.grid import Grid
+from repro.core.spectral import SpectralOps
+from repro.dist.halo import make_halo_interp
+from repro.dist.pencil_fft import PencilFFT
+
+
+class DistContext:
+    def __init__(
+        self,
+        grid: Grid,
+        mesh,
+        *,
+        axes=("data", "model"),
+        halo: int = 4,
+        packed: bool = True,
+    ):
+        self.grid = grid
+        self.mesh = mesh
+        self.axes = tuple(axes)
+        self.halo = int(halo)
+        self.fft = PencilFFT(grid, mesh, axes=self.axes, packed=packed)
+        self.ops = SpectralOps(grid, backend=self.fft)
+        self.interp = make_halo_interp(grid, mesh, axes=self.axes, halo=self.halo)
+
+    # -- shardings ---------------------------------------------------------
+    def scalar_sharding(self) -> NamedSharding:
+        """(N1, N2, N3) real-space pencil layout."""
+        a1, a2 = self.axes
+        return NamedSharding(self.mesh, P(a1, a2, None))
+
+    def vector_sharding(self) -> NamedSharding:
+        """(3, N1, N2, N3): component axis replicated, space pencil-sharded."""
+        a1, a2 = self.axes
+        return NamedSharding(self.mesh, P(None, a1, a2, None))
+
+    # -- input placement ---------------------------------------------------
+    def shard_scalar(self, f: jax.Array) -> jax.Array:
+        return jax.device_put(f, self.scalar_sharding())
+
+    def shard_vector(self, v: jax.Array) -> jax.Array:
+        return jax.device_put(v, self.vector_sharding())

@@ -1,0 +1,126 @@
+"""Halo-exchange tricubic interpolation (paper §III-C2, Alg. 1).
+
+The semi-Lagrangian solver evaluates fields at departure points that the
+planner bounds to ``|disp| <= halo`` voxels from their home voxel
+(``repro.core.planner.required_halo``).  On a 2-D pencil mesh each device
+therefore only needs its own block plus a ghost layer wide enough to cover
+``halo`` plus the tricubic stencil's (-1..+2) reach — the paper's Alg. 1
+scatter phase, realized here as neighbor-block ``lax.ppermute`` hops
+inside ``shard_map`` instead of MPI_Alltoallv.
+
+Ghost widths: a query ``q = i + d`` with ``|d| < halo`` touches stencil
+rows ``floor(q)-1 .. floor(q)+2``, i.e. ``halo+1`` cells below the block
+and ``halo+2`` above.  When the ghost layer is wider than the shard
+itself (claire-brain's halo=8 on 16-wide production shards, or halo=9 on
+4-wide test shards) the exchange takes ``ceil(width / shard_width)``
+ppermute hops per direction — whole neighbor blocks are forwarded
+ring-style and the overhang is trimmed.  The unsharded third axis wraps
+locally.  After the exchange, interpolation is embarrassingly local and
+reuses the ``kernels/ref.py`` oracle arithmetic verbatim, so the
+distributed path is bit-comparable to the single-device one.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.grid import Grid
+from repro.kernels import ref
+from repro.launch.mesh import mesh_axes_size
+
+
+def _wrap_pad(x: jnp.ndarray, lo: int, hi: int, axis: int) -> jnp.ndarray:
+    """Periodic pad along an unsharded local axis (index arithmetic, so the
+    pad may exceed the axis length)."""
+    n = x.shape[axis]
+    idx = jnp.arange(-lo, n + hi) % n
+    return jnp.take(x, idx, axis=axis)
+
+
+def _neighbor_blocks(x: jnp.ndarray, name, p: int, hops: int, from_left: bool):
+    """Blocks of the ``hops`` nearest ring neighbors in one direction.
+
+    ``from_left=True`` returns ``[block_{i-1}, block_{i-2}, ...]`` at device
+    ``i`` (periodic); each hop forwards the previously received block.
+    """
+    step = -1 if from_left else 1
+    perm = [((j + step) % p, j) for j in range(p)]
+    out, cur = [], x
+    for _ in range(hops):
+        cur = lax.ppermute(cur, name, perm)
+        out.append(cur)
+    return out
+
+
+def _exchange_axis(x: jnp.ndarray, name, p: int, lo: int, hi: int, axis: int):
+    """Extend ``x`` by ``lo``/``hi`` ghost cells along a sharded local axis."""
+    n = x.shape[axis]
+    if p == 1:
+        return _wrap_pad(x, lo, hi, axis)
+    kl, kh = -(-lo // n), -(-hi // n)
+    # single hop (the common case): permute only the ghost strip; multi-hop
+    # forwards whole blocks, since later hops need the full previous block
+    send_l = x if kl > 1 else lax.slice_in_dim(x, n - lo, n, axis=axis)
+    send_r = x if kh > 1 else lax.slice_in_dim(x, 0, hi, axis=axis)
+    left = _neighbor_blocks(send_l, name, p, hops=kl, from_left=True)
+    right = _neighbor_blocks(send_r, name, p, hops=kh, from_left=False)
+    lcat = jnp.concatenate(list(reversed(left)), axis=axis)
+    rcat = jnp.concatenate(right, axis=axis)
+    return jnp.concatenate(
+        [
+            lax.slice_in_dim(lcat, lcat.shape[axis] - lo, lcat.shape[axis], axis=axis),
+            x,
+            lax.slice_in_dim(rcat, 0, hi, axis=axis),
+        ],
+        axis=axis,
+    )
+
+
+def _interp_local(f, d, *, a1, a2, p1, p2, lo, hi):
+    """Per-device: exchange ghosts, then tricubic-gather in local coords."""
+    fp = _exchange_axis(f, a1, p1, lo, hi, axis=0)
+    fp = _exchange_axis(fp, a2, p2, lo, hi, axis=1)
+    fp = _wrap_pad(fp, lo, hi, axis=2)
+
+    n1l, n2l, n3 = f.shape
+    ct = jnp.promote_types(d.dtype, jnp.float32)
+    base = jnp.stack(
+        jnp.meshgrid(
+            jnp.arange(n1l, dtype=ct),
+            jnp.arange(n2l, dtype=ct),
+            jnp.arange(n3, dtype=ct),
+            indexing="ij",
+        ),
+        axis=0,
+    )
+    coords = base + jnp.float32(lo) + d.astype(ct)  # ghost origin sits at -lo
+    return ref.tricubic_points(fp, coords)
+
+
+def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4):
+    """Build the distributed ``interp(field, disp)`` callable.
+
+    Plugs into every ``interp=`` slot of ``repro.core.semilag`` /
+    ``repro.core.planner``: ``field`` is a ``(N1, N2, N3)`` scalar sharded
+    ``P(a1, a2, None)``, ``disp`` a ``(3, N1, N2, N3)`` grid-unit
+    displacement sharded ``P(None, a1, a2, None)`` with ``|disp| < halo``.
+    """
+    a1, a2 = tuple(axes)
+    p1, p2 = mesh_axes_size(mesh, a1), mesh_axes_size(mesh, a2)
+    n1, n2, _ = grid.shape
+    if n1 % p1 or n2 % p2:
+        raise ValueError(f"grid {grid.shape} not divisible by pencil mesh ({p1},{p2})")
+    body = partial(
+        _interp_local, a1=a1, a2=a2, p1=p1, p2=p2, lo=halo + 1, hi=halo + 2
+    )
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(a1, a2, None), P(None, a1, a2, None)),
+        out_specs=P(a1, a2, None),
+        check_rep=False,
+    )

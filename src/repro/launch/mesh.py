@@ -35,17 +35,19 @@ def mesh_axis_size(mesh, name: str) -> int:
     return int(mesh.shape[name]) if name in mesh.shape else 1
 
 
+def mesh_axes_size(mesh, ax) -> int:
+    """Device count behind one pencil dimension; the axis entry may be a
+    tuple of mesh axis names, e.g. ("pod", "data")."""
+    names = ax if isinstance(ax, tuple) else (ax,)
+    size = 1
+    for n in names:
+        size *= int(mesh.shape[n])
+    return size
+
+
 def validate_mesh_for_grid(mesh, grid_shape, axes=("data", "model")) -> None:
     """Pencil decomposition requires the first two grid dims to divide."""
-
-    def psize(ax):  # axis entry may be a tuple, e.g. ("pod", "data")
-        names = ax if isinstance(ax, tuple) else (ax,)
-        out = 1
-        for n in names:
-            out *= int(mesh.shape[n])
-        return out
-
-    p1, p2 = psize(axes[0]), psize(axes[1])
+    p1, p2 = mesh_axes_size(mesh, axes[0]), mesh_axes_size(mesh, axes[1])
     n1, n2, n3 = grid_shape
     if n1 % p1 or n2 % p2:
         raise ValueError(f"grid {grid_shape} not divisible by pencil mesh ({p1},{p2})")

@@ -1,8 +1,45 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device; the
-multi-device checks live in test_dist.py and spawn subprocesses."""
+multi-device checks (test_dist.py, test_pencil_fft.py, test_dist_interp.py)
+spawn subprocesses via ``run_multidevice`` because XLA locks the device
+count at first jax init.
+
+Markers (fast tier: ``pytest -m "not slow"``, see ROADMAP):
+    slow — subprocess-spawning / minutes-long cases
+    dist — exercises the multi-device repro.dist path
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import numpy as np
 import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: subprocess-spawning or minutes-long test")
+    config.addinivalue_line("markers", "dist: exercises the multi-device repro.dist path")
+
+
+def run_multidevice(body: str, devices: int = 8, timeout: int = 520) -> str:
+    """Run a test body in a fresh interpreter with N placeholder devices."""
+    code = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, {os.path.join(ROOT, "src")!r})
+        import jax, jax.numpy as jnp, numpy as np
+        """
+    ) + textwrap.dedent(body)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
 
 
 @pytest.fixture(scope="session")

@@ -61,6 +61,7 @@ def test_elastic_restore_respec(tmp_path, rng, single_mesh):
     assert out["w"].sharding.spec == P("data", None)
 
 
+@pytest.mark.slow
 def test_bit_exact_resume(tmp_path, rng, single_mesh):
     """Train 4 steps; or train 2, checkpoint, restart, train 2: identical."""
     cfg = get_smoke_config("qwen3-1.7b")

@@ -1,31 +1,11 @@
 """Distributed-path equivalence, via subprocesses with 8 placeholder
 devices (XLA locks device count at first jax init, so these cannot run
 in-process with the rest of the suite)."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from conftest import run_multidevice as _run
 
-
-def _run(body: str, devices: int = 8, timeout: int = 520):
-    code = textwrap.dedent(
-        f"""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
-        import sys
-        sys.path.insert(0, {os.path.join(ROOT, "src")!r})
-        import jax, jax.numpy as jnp, numpy as np
-        """
-    ) + textwrap.dedent(body)
-    proc = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout
-    )
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    return proc.stdout
+pytestmark = [pytest.mark.slow, pytest.mark.dist]
 
 
 def test_pencil_fft_matches_local():

@@ -1,0 +1,41 @@
+"""Regression: the single-device Pallas tricubic kernel and the
+distributed halo-exchange interpolation are pinned to EACH OTHER on the
+same displacement field — not just each to kernels/ref.py — so a drift in
+either interpolation path breaks this test even if it stays within its
+own oracle tolerance.
+"""
+import pytest
+
+from conftest import run_multidevice
+
+pytestmark = [pytest.mark.slow, pytest.mark.dist]
+
+
+def test_pallas_kernel_matches_halo_interp():
+    run_multidevice(
+        """
+        from repro.core.grid import make_grid
+        from repro.dist.context import DistContext
+        from repro.kernels.tricubic import tricubic_displace_pallas
+        from repro.launch.mesh import make_mesh
+
+        halo = 4
+        mesh = make_mesh((2, 4), ("data", "model"))
+        grid = make_grid((16, 16, 32))
+        ctx = DistContext(grid, mesh, halo=halo)
+        rng = np.random.default_rng(1)
+        f = jnp.asarray(rng.standard_normal(grid.shape), jnp.float32)
+        d = jnp.asarray(
+            rng.uniform(-halo + 0.01, halo - 0.01, (3,) + grid.shape), jnp.float32
+        )
+
+        out_halo = jax.jit(ctx.interp)(
+            ctx.shard_scalar(f), jax.device_put(d, ctx.vector_sharding())
+        )
+        out_pallas = tricubic_displace_pallas(
+            f, d, tile=(8, 8, 32), halo=halo, interpret=True
+        )
+        err = float(jnp.max(jnp.abs(out_halo - out_pallas)))
+        assert err < 1e-4, err
+        """
+    )

@@ -64,7 +64,14 @@ def test_param_counts_plausible():
     assert 1.0e8 < get_config("mamba2-130m").param_count() < 2.0e8
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize(
+    "arch",
+    [
+        # the two heaviest smoke configs only run in the full tier
+        pytest.param(a, marks=pytest.mark.slow) if a in ("zamba2-2.7b", "gemma3-1b") else a
+        for a in ARCHS
+    ],
+)
 def test_smoke_forward_and_train(arch, rng, single_mesh):
     cfg = get_smoke_config(arch)
     model = build_model(cfg)
@@ -95,7 +102,14 @@ def test_smoke_forward_and_train(arch, rng, single_mesh):
 
 
 @pytest.mark.parametrize(
-    "arch", ["gemma-7b", "gemma3-1b", "mamba2-130m", "zamba2-2.7b", "qwen2-vl-72b"]
+    "arch",
+    [
+        "gemma-7b",
+        pytest.param("gemma3-1b", marks=pytest.mark.slow),
+        "mamba2-130m",
+        pytest.param("zamba2-2.7b", marks=pytest.mark.slow),
+        "qwen2-vl-72b",
+    ],
 )
 def test_decode_matches_forward(arch, rng, single_mesh):
     cfg = get_smoke_config(arch)
@@ -119,6 +133,7 @@ def test_decode_matches_forward(arch, rng, single_mesh):
     )
 
 
+@pytest.mark.slow
 def test_moe_decode_matches_forward_dense_path(rng, single_mesh):
     cfg = dataclasses.replace(get_smoke_config("qwen3-moe-235b-a22b"), moe_dispatch="dense")
     model = build_model(cfg)

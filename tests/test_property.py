@@ -1,7 +1,14 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+``hypothesis`` is an optional dev dependency: without it this module
+degrades to a skip instead of hard-aborting suite collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.grid import make_grid

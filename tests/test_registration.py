@@ -42,6 +42,7 @@ def test_monotone_objective(solved):
     assert all(b <= a + 1e-6 for a, b in zip(js, js[1:]))
 
 
+@pytest.mark.slow
 def test_newton_mesh_independence():
     """Paper §IV-B: Newton iteration counts are mesh-independent."""
     iters = {}
@@ -55,6 +56,7 @@ def test_newton_mesh_independence():
     assert abs(iters[16] - iters[24]) <= 2
 
 
+@pytest.mark.slow
 def test_incompressible_volume_preservation():
     """div v = 0 => det(grad y) = 1 (locally volume preserving, §II-A)."""
     rho_R, rho_T, _, grid = synthetic.synthetic_problem(16, incompressible=True, amplitude=0.5)
@@ -65,6 +67,7 @@ def test_incompressible_volume_preservation():
     assert abs(out["det_min"] - 1.0) < 0.1 and abs(out["det_max"] - 1.0) < 0.1
 
 
+@pytest.mark.slow
 def test_beta_sensitivity_matvecs_increase():
     """Paper Table V: smaller beta => more Hessian matvecs."""
     counts = {}
@@ -78,6 +81,7 @@ def test_beta_sensitivity_matvecs_increase():
     assert counts[1e-3] > counts[1e-1]
 
 
+@pytest.mark.slow
 def test_beta_continuation_warm_start():
     rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
     cfg = RegistrationConfig(

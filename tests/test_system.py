@@ -9,10 +9,13 @@ the way §IV does, on CPU-scale grids.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import gauss_newton as gn
 from repro.core.registration import RegistrationConfig, register
 from repro.data import synthetic
+
+pytestmark = pytest.mark.slow  # full end-to-end solves, ~25s of the suite
 
 
 def test_synthetic_registration_end_to_end():
