@@ -1,0 +1,88 @@
+"""Coarse-to-fine vs single-level Gauss-Newton: the grid-continuation table.
+
+    PYTHONPATH=src python -m benchmarks.run --suite multilevel
+
+Solves the paper's synthetic problem once at fixed (fine) resolution and
+once through the ``repro.multilevel`` ladder, at the same convergence
+tolerance (the warm-started fine level terminates against the cold-start
+fine gradient norm), and emits ``BENCH_multilevel.json``: per-level Hessian
+matvecs, fine-grid-equivalent matvecs (matvecs weighted by level/fine point
+ratio — the paper's Table V cost metric made resolution-aware), and
+wall-clock, next to the single-level baseline column.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core import gauss_newton as gn
+from repro.data import synthetic
+
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                           "BENCH_multilevel.json")
+
+
+def measure(n: int = 24, beta: float = 1e-2, gtol: float = 1e-2, n_levels: int = 2,
+            max_newton: int = 12, max_cg: int = 50) -> dict:
+    """Run the single-level baseline and the C2F ladder; return the record."""
+    from repro import multilevel
+    from repro.multilevel.hierarchy import MultilevelConfig
+
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(n)
+    base = gn.GNConfig(beta=beta, n_t=4, max_newton=max_newton, gtol=gtol, max_cg=max_cg)
+
+    t0 = time.time()
+    single = gn.solve(rho_R, rho_T, grid, base)
+    t_single = time.time() - t0
+
+    mlcfg = MultilevelConfig(solver=base, n_levels=n_levels)
+    t0 = time.time()
+    ml = multilevel.solve(rho_R, rho_T, grid, mlcfg)
+    t_ml = time.time() - t0
+
+    return {
+        "problem": {"fine_grid": list(grid.shape), "beta": beta, "gtol": gtol,
+                    "levels": ml["grids"]},
+        "single_level": {
+            "newton_iters": single["newton_iters"],
+            "hessian_matvecs": single["hessian_matvecs"],
+            "fine_equiv_matvecs": float(single["hessian_matvecs"]),
+            "rel_gnorm": single["history"][-1]["rel_gnorm"],
+            "wall_s": t_single,
+        },
+        "multilevel": {
+            "levels": ml["levels"],
+            "newton_iters": ml["newton_iters"],
+            "fine_grid_matvecs": ml["fine_matvecs"],
+            "fine_equiv_matvecs": ml["fine_equiv_matvecs"],
+            "rel_gnorm": ml["history"][-1]["rel_gnorm"],
+            "wall_s": t_ml,
+        },
+    }
+
+
+def write_record(rec: dict, out: str = DEFAULT_OUT) -> None:
+    with open(out + ".tmp", "w") as f:
+        json.dump(rec, f, indent=1)
+    os.replace(out + ".tmp", out)
+
+
+def main(out: str = DEFAULT_OUT):
+    rec = measure()
+    write_record(rec, out)
+    s, m = rec["single_level"], rec["multilevel"]
+    emit("multilevel/single_level", s["wall_s"] * 1e6,
+         f"matvecs={s['hessian_matvecs']};fine_equiv={s['fine_equiv_matvecs']:.1f}")
+    emit("multilevel/coarse_to_fine", m["wall_s"] * 1e6,
+         f"fine_matvecs={m['fine_grid_matvecs']};fine_equiv={m['fine_equiv_matvecs']:.1f}")
+    for lv in m["levels"]:
+        emit(f"multilevel/level_{'x'.join(map(str, lv['shape']))}", lv["wall_s"] * 1e6,
+             f"matvecs={lv['hessian_matvecs']};fine_equiv={lv['fine_equiv_matvecs']:.1f}")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

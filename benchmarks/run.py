@@ -1,16 +1,26 @@
 """Benchmark harness — one module per paper table (+ kernel + LM roofline).
 
-    PYTHONPATH=src python -m benchmarks.run            # all
-    PYTHONPATH=src python -m benchmarks.run table5     # one
+    PYTHONPATH=src python -m benchmarks.run                    # all
+    PYTHONPATH=src python -m benchmarks.run table5             # one
+    PYTHONPATH=src python -m benchmarks.run --suite multilevel # same, flag form
+                                             (writes BENCH_multilevel.json)
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
-from benchmarks import kernel_microbench, lm_roofline, table1_scaling, table3_incompressible, table5_beta
+from benchmarks import (
+    kernel_microbench,
+    lm_roofline,
+    multilevel_c2f,
+    table1_scaling,
+    table3_incompressible,
+    table5_beta,
+)
 
 TABLES = {
     "table1": table1_scaling.main,
@@ -18,11 +28,21 @@ TABLES = {
     "table5": table5_beta.main,
     "kernel": kernel_microbench.main,
     "lm_roofline": lm_roofline.main,
+    "multilevel": multilevel_c2f.main,
 }
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(TABLES)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suites", nargs="*", help=f"subset to run: {list(TABLES)}")
+    ap.add_argument("--suite", action="append", default=[], choices=list(TABLES),
+                    help="suite to run (repeatable); combined with positionals")
+    args = ap.parse_args()
+    which = list(args.suites) + list(args.suite) or list(TABLES)
+    unknown = [w for w in which if w not in TABLES]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from {list(TABLES)}")
+
     print("name,us_per_call,derived")
     failed = []
     for name in which:

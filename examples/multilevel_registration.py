@@ -1,0 +1,57 @@
+"""Coarse-to-fine registration (repro.multilevel, CLAIRE-style continuation).
+
+    PYTHONPATH=src python examples/multilevel_registration.py
+
+Solves the brain-like phantom pair through a 3-level ladder (n/4 -> n/2 -> n)
+with the beta-continuation schedule spread across levels, then re-solves at
+fixed fine resolution for the cost comparison the paper's successors report:
+most Newton progress bought at coarse resolution, the warm-started fine
+level finishing in a handful of cheap CG iterations.
+"""
+import sys, time
+import numpy as np
+sys.path.insert(0, "src")
+
+from repro.core import gauss_newton as gn
+from repro.core.registration import RegistrationConfig, register
+from repro.data import synthetic
+from repro.multilevel.hierarchy import MultilevelConfig
+
+
+def main():
+    n = 32
+    rho_R, rho_T, grid = synthetic.brain_like(n, seed=3)
+    solver = gn.GNConfig(
+        beta=1e-3, beta_continuation=(1e-1, 1e-2), n_t=4,
+        max_newton=8, gtol=1e-2, max_cg=40,
+    )
+
+    cfg = RegistrationConfig(multilevel=MultilevelConfig(solver=solver, n_levels=3))
+    t0 = time.time()
+    out = register(rho_R, rho_T, cfg, grid=grid, verbose=True)
+    t_ml = time.time() - t0
+    print(f"\nmultilevel: {t_ml:.1f}s residual_rel={out['residual_rel']:.4f} "
+          f"det in [{out['det_min']:.3f}, {out['det_max']:.3f}]")
+    for lv in out["levels"]:
+        print(f"  level {lv['shape']} betas={lv['betas']} newton={lv['newton_iters']} "
+              f"matvecs={lv['hessian_matvecs']} (fine-equiv {lv['fine_equiv_matvecs']:.1f}) "
+              f"{lv['wall_s']:.1f}s")
+    print(f"  fine-grid matvecs: {out['fine_matvecs']}  "
+          f"fine-equivalent total: {out['fine_equiv_matvecs']:.1f}")
+
+    t0 = time.time()
+    single = register(rho_R, rho_T, RegistrationConfig(solver=solver), grid=grid)
+    print(f"single-level: {time.time()-t0:.1f}s residual_rel={single['residual_rel']:.4f} "
+          f"matvecs={single['hessian_matvecs']}")
+
+    mid = n // 2
+    np.save("/tmp/multilevel_slices.npy", {
+        "ref": np.asarray(rho_R[mid]), "template": np.asarray(rho_T[mid]),
+        "deformed": np.asarray(out["rho_deformed"][mid]),
+        "det": np.asarray(out["det_grad_y"][mid]),
+    }, allow_pickle=True)
+    print("axial slices written to /tmp/multilevel_slices.npy")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Tier-1 smoke: the fast test tier plus one tiny coarse-to-fine registration
+# end-to-end (restrict -> coarse GN solve -> prolong warm start -> fine GN
+# solve -> diffeomorphism check).  Total budget ~2.5 min on the CPU container.
+#
+#     bash scripts/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q -m "not slow"
+
+python - <<'EOF'
+import jax.numpy as jnp
+from repro.core import gauss_newton as gn
+from repro.core.registration import RegistrationConfig, register
+from repro.data import synthetic
+from repro.multilevel.hierarchy import MultilevelConfig
+
+rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
+cfg = RegistrationConfig(multilevel=MultilevelConfig(
+    solver=gn.GNConfig(beta=1e-2, n_t=4, max_newton=8, gtol=1e-2, max_cg=30),
+    n_levels=2,
+))
+out = register(rho_R, rho_T, cfg, grid=grid)
+assert out["history"][-1]["rel_gnorm"] <= 1e-2 + 1e-6, out["history"][-1]
+assert out["det_min"] > 0.0, out["det_min"]
+assert len(out["levels"]) == 2, out["levels"]
+print("smoke 2-level registration OK:",
+      f"fine matvecs={out['fine_matvecs']}",
+      f"fine-equiv={out['fine_equiv_matvecs']:.1f}",
+      f"residual_rel={out['residual_rel']:.3f}")
+EOF
+
+echo "tier-1 smoke PASSED"

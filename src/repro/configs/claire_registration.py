@@ -3,6 +3,11 @@
 Grid-size configs used by the dry-run and benchmarks: the paper's scaling
 study covers 64^3 .. 1024^3 (Tables I/II) plus the 256x300x256 brain pair
 (Table IV; padded to 256x304x256 for the 16x16 pencil mesh).
+
+``levels`` configures coarse-to-fine grid continuation (repro.multilevel):
+an ordered coarse-to-fine ladder whose last entry equals ``grid``.  Every
+ladder entry must satisfy the pencil-mesh divisibility constraints (which
+rules out a brain-pair ladder: 304/2 = 152 is not divisible by 16).
 """
 import dataclasses
 
@@ -15,6 +20,14 @@ class RegConfig:
     n_t: int = 4
     incompressible: bool = False
     halo: int = 8
+    levels: tuple | None = None  # coarse->fine ladder; None = single level
+
+
+def _cubic_ladder(n: int, n_levels: int = 3, floor: int = 64) -> tuple:
+    sizes = [n]
+    while len(sizes) < n_levels and sizes[-1] // 2 >= floor:
+        sizes.append(sizes[-1] // 2)
+    return tuple((s, s, s) for s in reversed(sizes))
 
 
 GRIDS = {
@@ -25,4 +38,7 @@ GRIDS = {
     "claire-1024": RegConfig("claire-1024", (1024, 1024, 1024)),
     "claire-256-inc": RegConfig("claire-256-inc", (256, 256, 256), incompressible=True),
     "claire-brain": RegConfig("claire-brain", (256, 304, 256), beta=1e-4),
+    # coarse-to-fine ladders (repro.multilevel): 64^3 -> 128^3 -> 256^3 etc.
+    "claire-256-ml": RegConfig("claire-256-ml", (256, 256, 256), levels=_cubic_ladder(256)),
+    "claire-512-ml": RegConfig("claire-512-ml", (512, 512, 512), levels=_cubic_ladder(512)),
 }

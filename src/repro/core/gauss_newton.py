@@ -109,8 +109,21 @@ def newton_iteration(
     ops: SpectralOps,
     cfg: GNConfig,
     interp=None,
+    precond=None,
 ):
-    """One globalized inexact Gauss-Newton step.  Returns (v_new, NewtonLog)."""
+    """One globalized inexact Gauss-Newton step.  Returns (v_new, NewtonLog).
+
+    ``precond`` is an optional factory ``(state, prob) -> (r -> z)``
+    replacing the default spectral preconditioner — e.g. the two-level
+    coarse-grid preconditioner built by ``repro.multilevel.precond``.  It is
+    invoked once per Newton iteration with the fresh ``NewtonState`` and the
+    current ``Problem`` (whose ``beta`` tracks the continuation schedule) so
+    it can assemble state-dependent coarse operators inside the same jit
+    program.  The Armijo steepest-descent safeguard always uses the cheap
+    spectral preconditioner: the safeguard direction only needs descent, and
+    a custom factory may be arbitrarily expensive (XLA's select evaluates
+    both ``jnp.where`` operands).
+    """
     interp = interp or _interp_fn(cfg)
     grid = prob.grid
     fused = cfg.fused_elliptic
@@ -123,13 +136,15 @@ def newton_iteration(
             return obj.gn_hessian_matvec(p, state, prob, ops, interp, fused=fused)
         return obj.full_hessian_matvec(p, state, prob, ops, interp)
 
-    def precond(r):
+    def spectral_precond(r):
         if fused:
             return ops.precond_project(r, prob.beta, prob.incompressible)
         z = ops.precond_apply(r, prob.beta)
         if prob.incompressible:
             z = ops.leray(z)
         return z
+
+    precond = spectral_precond if precond is None else precond(state, prob)
 
     eta = jnp.minimum(cfg.eta_max, jnp.sqrt(gnorm / jnp.maximum(g0_norm, 1e-30)))
     rhs = -state.g
@@ -143,7 +158,7 @@ def newton_iteration(
     # ---- Armijo backtracking on J
     gdv = grid.inner(state.g, dv)
     # fall back to steepest descent if PCG returned a non-descent direction
-    dv = jnp.where(gdv < 0, dv, -precond(state.g))
+    dv = jnp.where(gdv < 0, dv, -spectral_precond(state.g))
     gdv = jnp.minimum(gdv, grid.inner(state.g, dv))
 
     def j_of(vv):
@@ -187,12 +202,20 @@ def solve(
     verbose: bool = False,
     callback: Callable[[int, dict], None] | None = None,
     interp=None,
+    precond=None,
+    g0_ref: float | None = None,
 ):
     """Full registration drive: (optional) beta continuation + Newton loop.
 
     The per-iteration work is jit-compiled once per (grid, beta); the Python
     loop handles convergence, logging, and checkpoint callbacks.  On a mesh,
     pass ``ops=ctx.ops, interp=ctx.interp`` from a ``DistContext``.
+
+    ``precond`` is the factory forwarded to ``newton_iteration``.  ``g0_ref``
+    overrides the reference gradient norm of the convergence test: the
+    multilevel driver passes the *cold-start* fine-grid norm so a warm-started
+    level terminates at the same absolute tolerance a single-level solve
+    would, instead of chasing gtol relative to its already-small gradient.
     """
     ops = ops or SpectralOps(grid)
     v = v0 if v0 is not None else jnp.zeros((3,) + grid.shape, grid.dtype)
@@ -213,11 +236,16 @@ def solve(
             incompressible=cfg.incompressible,
         )
         step_fn = jax.jit(
-            partial(newton_iteration, prob=prob, ops=ops, cfg=cfg, interp=interp)
+            partial(
+                newton_iteration, prob=prob, ops=ops, cfg=cfg, interp=interp, precond=precond
+            )
         )
         # reference gradient norm at this continuation level
-        state0 = jax.jit(partial(obj.newton_state, prob=prob, ops=ops, interp=interp))(v)
-        g0 = jnp.sqrt(grid.norm_sq(state0.g))
+        if g0_ref is not None:
+            g0 = jnp.float32(g0_ref)
+        else:
+            state0 = jax.jit(partial(obj.newton_state, prob=prob, ops=ops, interp=interp))(v)
+            g0 = jnp.sqrt(grid.norm_sq(state0.g))
         gnorm = g0
         for it in range(cfg.max_newton):
             v, log = step_fn(v, g0)

@@ -72,7 +72,12 @@ def required_halo(plan: SLPlan) -> jnp.ndarray:
 
     ceil(max |displacement|) — the stencil's extra +-(1,2) voxels are part
     of the kernels' fixed padding.  Traced value: the distributed layer
-    checks it against its static halo budget and falls back to gather.
+    enforces exactly this bound at runtime — ``DistContext`` wraps its halo
+    interp with ``repro.dist.halo.make_checked_interp``, which re-derives
+    the bound per displacement field and NaN-poisons (``halo_check="error"``,
+    default) or falls back to the global gather (``"gather"``) instead of
+    silently reading ring-wrapped ghost data when a line-search step
+    overshoots ``DistContext.halo``.
     """
     return jnp.ceil(
         jnp.maximum(kops.max_displacement(plan.disp_fwd), kops.max_displacement(plan.disp_adj))

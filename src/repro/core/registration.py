@@ -10,8 +10,12 @@ diffeomorphism check, Figure 7).
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 import jax.numpy as jnp
+
+if TYPE_CHECKING:  # runtime import stays inside register(): core must not
+    from repro.multilevel.hierarchy import MultilevelConfig  # depend on multilevel
 
 from repro.core import gauss_newton as gn
 from repro.core import semilag
@@ -24,6 +28,9 @@ from repro.core.spectral import SpectralOps
 class RegistrationConfig:
     solver: gn.GNConfig = dataclasses.field(default_factory=gn.GNConfig)
     presmooth: bool = True  # spectral Gaussian at grid bandwidth (paper §III-B1)
+    # coarse-to-fine grid continuation (repro.multilevel); None = single level.
+    # ``multilevel.solver`` supersedes ``solver`` when set.
+    multilevel: "MultilevelConfig | None" = None
 
 
 def register(
@@ -42,7 +49,15 @@ def register(
         rho_R = ops.smooth(rho_R)
         rho_T = ops.smooth(rho_T)
 
-    out = gn.solve(rho_R, rho_T, grid, config.solver, ops=ops, verbose=verbose, v0=v0)
+    if config.multilevel is not None:
+        from repro import multilevel
+
+        out = multilevel.solve(
+            rho_R, rho_T, grid, config.multilevel, ops=ops, verbose=verbose, v0=v0
+        )
+        config = dataclasses.replace(config, solver=config.multilevel.solver)
+    else:
+        out = gn.solve(rho_R, rho_T, grid, config.solver, ops=ops, verbose=verbose, v0=v0)
     v = out["v"]
 
     # deformation map + diagnostics

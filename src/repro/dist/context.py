@@ -22,9 +22,9 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.grid import Grid
+from repro.core.grid import Grid, make_grid
 from repro.core.spectral import SpectralOps
-from repro.dist.halo import make_halo_interp
+from repro.dist.halo import make_checked_interp, make_halo_interp
 from repro.dist.pencil_fft import PencilFFT
 
 
@@ -37,14 +37,47 @@ class DistContext:
         axes=("data", "model"),
         halo: int = 4,
         packed: bool = True,
+        interp_method: str = "auto",
+        halo_check: str = "error",
     ):
         self.grid = grid
         self.mesh = mesh
         self.axes = tuple(axes)
         self.halo = int(halo)
+        self.packed = packed
+        self.interp_method = interp_method
+        self.halo_check = halo_check
         self.fft = PencilFFT(grid, mesh, axes=self.axes, packed=packed)
         self.ops = SpectralOps(grid, backend=self.fft)
-        self.interp = make_halo_interp(grid, mesh, axes=self.axes, halo=self.halo)
+        # per-shard kernel dispatch (Pallas on TPU / gather oracle) wrapped by
+        # the planner's dynamic halo-budget check ("off" disables the check)
+        self.halo_interp = make_halo_interp(
+            grid, mesh, axes=self.axes, halo=self.halo, method=interp_method
+        )
+        self.interp = (
+            self.halo_interp
+            if halo_check == "off"
+            else make_checked_interp(
+                self.halo_interp, mesh, self.axes, self.halo, on_overflow=halo_check
+            )
+        )
+
+    def coarsen(self, shape) -> "DistContext":
+        """Derive the same-mesh context of a coarser grid (repro.multilevel).
+
+        Same pencil axes, halo budget, and interpolation dispatch; the coarse
+        grid must still satisfy the mesh divisibility constraints (validated
+        by ``PencilFFT``).
+        """
+        return DistContext(
+            make_grid(shape, self.grid.dtype),
+            self.mesh,
+            axes=self.axes,
+            halo=self.halo,
+            packed=self.packed,
+            interp_method=self.interp_method,
+            halo_check=self.halo_check,
+        )
 
     # -- shardings ---------------------------------------------------------
     def scalar_sharding(self) -> NamedSharding:

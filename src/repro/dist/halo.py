@@ -23,13 +23,15 @@ from __future__ import annotations
 
 from functools import partial
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.grid import Grid
 from repro.kernels import ref
+from repro.kernels.tricubic import tricubic_displace_pallas_padded
 from repro.launch.mesh import mesh_axes_size
 
 
@@ -80,13 +82,29 @@ def _exchange_axis(x: jnp.ndarray, name, p: int, lo: int, hi: int, axis: int):
     )
 
 
-def _interp_local(f, d, *, a1, a2, p1, p2, lo, hi):
-    """Per-device: exchange ghosts, then tricubic-gather in local coords."""
+def _interp_local(f, d, *, a1, a2, p1, p2, lo, hi, kernel="ref"):
+    """Per-device: exchange ghosts, then tricubic in local coordinates.
+
+    ``kernel="pallas"`` dispatches the per-shard interpolation to the
+    VMEM-blocked Pallas kernel (``kernels/tricubic.py``): the ghost-extended
+    block IS the kernel's padded-field layout (``halo+1`` planes below,
+    ``halo+2`` above), so the exchange and the kernel compose with no copy.
+    Falls back to the ``kernels/ref.py`` gather when the shard shape has no
+    valid tile or the kernel would run interpreted off-TPU.
+    """
     fp = _exchange_axis(f, a1, p1, lo, hi, axis=0)
     fp = _exchange_axis(fp, a2, p2, lo, hi, axis=1)
     fp = _wrap_pad(fp, lo, hi, axis=2)
 
     n1l, n2l, n3 = f.shape
+    if kernel in ("pallas", "pallas_interpret"):
+        from repro.kernels.ops import _pick_tile
+
+        tile = _pick_tile((n1l, n2l, n3))
+        if tile is not None:
+            return tricubic_displace_pallas_padded(
+                fp, d, tile=tile, halo=lo - 1, interpret=(kernel == "pallas_interpret")
+            )
     ct = jnp.promote_types(d.dtype, jnp.float32)
     base = jnp.stack(
         jnp.meshgrid(
@@ -101,13 +119,28 @@ def _interp_local(f, d, *, a1, a2, p1, p2, lo, hi):
     return ref.tricubic_points(fp, coords)
 
 
-def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4):
+def _resolve_method(method: str) -> str:
+    """"auto" -> the Pallas kernel on TPU, the jnp gather elsewhere.
+
+    "pallas" forces the kernel (interpret mode off-TPU: correctness tests);
+    "ref" forces the gather.
+    """
+    if method == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if method == "pallas" and jax.default_backend() != "tpu":
+        return "pallas_interpret"
+    return method
+
+
+def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4,
+                     method: str = "auto"):
     """Build the distributed ``interp(field, disp)`` callable.
 
     Plugs into every ``interp=`` slot of ``repro.core.semilag`` /
     ``repro.core.planner``: ``field`` is a ``(N1, N2, N3)`` scalar sharded
     ``P(a1, a2, None)``, ``disp`` a ``(3, N1, N2, N3)`` grid-unit
     displacement sharded ``P(None, a1, a2, None)`` with ``|disp| < halo``.
+    ``method`` picks the per-shard kernel (see ``_resolve_method``).
     """
     a1, a2 = tuple(axes)
     p1, p2 = mesh_axes_size(mesh, a1), mesh_axes_size(mesh, a2)
@@ -115,7 +148,8 @@ def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4):
     if n1 % p1 or n2 % p2:
         raise ValueError(f"grid {grid.shape} not divisible by pencil mesh ({p1},{p2})")
     body = partial(
-        _interp_local, a1=a1, a2=a2, p1=p1, p2=p2, lo=halo + 1, hi=halo + 2
+        _interp_local, a1=a1, a2=a2, p1=p1, p2=p2, lo=halo + 1, hi=halo + 2,
+        kernel=_resolve_method(method),
     )
     return shard_map(
         body,
@@ -124,3 +158,55 @@ def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4):
         out_specs=P(a1, a2, None),
         check_rep=False,
     )
+
+
+# --------------------------------------------------------------------------- #
+# dynamic halo budget (ROADMAP): the ghost exchange is only correct while
+# every departure point stays within ``halo`` voxels of its home voxel
+# (``repro.core.planner.required_halo``'s bound).  A line-search step that
+# overshoots would silently read ring-wrapped garbage from the local block;
+# the checked wrapper turns that into an explicit runtime branch.
+# --------------------------------------------------------------------------- #
+def make_checked_interp(halo_interp, mesh, axes, halo: int, on_overflow: str = "error"):
+    """Wrap a halo interp with a per-call displacement-bound check.
+
+    ``on_overflow``:
+      * "error"  — cheap default: the output is NaN-poisoned and a debug
+        message printed when ``ceil(max|disp|) > halo``; NaNs surface in the
+        line search / convergence test instead of a silently wrong field.
+      * "gather" — correct-but-slow fallback: a ``lax.cond`` switches to the
+        global ``kernels/ref.py`` gather (XLA all-gathers the field), so the
+        iteration stays exact at the cost of one global collective.
+    """
+    from repro.kernels.ops import max_displacement
+
+    a1, a2 = tuple(axes)
+    out_sharding = NamedSharding(mesh, P(a1, a2, None))
+    budget = jnp.float32(halo)
+
+    def checked(field, disp):
+        need = jnp.ceil(max_displacement(disp))
+        ok = need <= budget
+        lax.cond(
+            ok,
+            lambda n: None,
+            lambda n: jax.debug.print(
+                "halo-interp overflow: required halo {n} > budget "
+                + str(halo) + " ({m})", n=n, m=on_overflow,
+            ),
+            need,
+        )
+        if on_overflow == "gather":
+            return lax.cond(
+                ok,
+                halo_interp,
+                lambda f, d: lax.with_sharding_constraint(
+                    ref.tricubic_displace(f, d), out_sharding
+                ),
+                field,
+                disp,
+            )
+        out = halo_interp(field, disp)
+        return out + jnp.where(ok, 0.0, jnp.nan).astype(out.dtype)
+
+    return checked

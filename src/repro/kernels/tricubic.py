@@ -101,6 +101,44 @@ def _kernel(fpad_hbm, disp_ref, out_ref, scratch, sem, *, tile, halo):
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "halo", "interpret"))
+def tricubic_displace_pallas_padded(
+    fpad: jnp.ndarray,
+    disp: jnp.ndarray,
+    *,
+    tile: tuple[int, int, int] = (8, 8, 32),
+    halo: int = 4,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Kernel entry for an ALREADY ghost-extended field.
+
+    ``fpad`` is the (N1+2H+3, N2+2H+3, N3+2H+3) block with ``halo+1`` planes
+    below and ``halo+2`` above each axis — exactly the layout produced both
+    by ``jnp.pad(mode="wrap")`` (single device) and by the multi-hop
+    ``ppermute`` ghost exchange in ``repro.dist.halo`` (per-shard block), so
+    the distributed path dispatches here without an extra copy.
+    """
+    pad = 2 * halo + 3
+    n1, n2, n3 = (s - pad for s in fpad.shape)
+    t1, t2, t3 = tile
+    assert n1 % t1 == 0 and n2 % t2 == 0 and n3 % t3 == 0, ((n1, n2, n3), tile)
+    w = (t1 + 2 * halo + 3, t2 + 2 * halo + 3, t3 + 2 * halo + 3)
+    grid = (n1 // t1, n2 // t2, n3 // t3)
+    kern = functools.partial(_kernel, tile=tile, halo=halo)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # stays in HBM; DMA'd manually
+            pl.BlockSpec((3, t1, t2, t3), lambda i, j, k: (0, i, j, k)),
+        ],
+        out_specs=pl.BlockSpec((t1, t2, t3), lambda i, j, k: (i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((n1, n2, n3), fpad.dtype),
+        scratch_shapes=[pltpu.VMEM(w, fpad.dtype), pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(fpad, disp)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "halo", "interpret"))
 def tricubic_displace_pallas(
     field: jnp.ndarray,
     disp: jnp.ndarray,
@@ -121,19 +159,6 @@ def tricubic_displace_pallas(
     assert n1 % t1 == 0 and n2 % t2 == 0 and n3 % t3 == 0, (field.shape, tile)
     lo, hi = halo + 1, halo + 2
     fpad = jnp.pad(field, ((lo, hi), (lo, hi), (lo, hi)), mode="wrap")
-
-    w = (t1 + 2 * halo + 3, t2 + 2 * halo + 3, t3 + 2 * halo + 3)
-    grid = (n1 // t1, n2 // t2, n3 // t3)
-    kern = functools.partial(_kernel, tile=tile, halo=halo)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # stays in HBM; DMA'd manually
-            pl.BlockSpec((3, t1, t2, t3), lambda i, j, k: (0, i, j, k)),
-        ],
-        out_specs=pl.BlockSpec((t1, t2, t3), lambda i, j, k: (i, j, k)),
-        out_shape=jax.ShapeDtypeStruct((n1, n2, n3), field.dtype),
-        scratch_shapes=[pltpu.VMEM(w, field.dtype), pltpu.SemaphoreType.DMA],
-        interpret=interpret,
-    )(fpad, disp)
+    return tricubic_displace_pallas_padded(
+        fpad, disp, tile=tile, halo=halo, interpret=interpret
+    )

@@ -359,7 +359,7 @@ def _reg_component_costs(grid, ctx, rcfg, mesh, chips, fused: bool = False):
     }
 
 
-def lower_registration_cell(name: str, multi_pod: bool, verbose: bool = True) -> dict:
+def lower_registration_cell(name: str, multi_pod: bool, verbose: bool = True, rcfg=None) -> dict:
     from repro.core import gauss_newton as gn
     from repro.core import objective as obj
     from repro.core.grid import make_grid
@@ -367,7 +367,7 @@ def lower_registration_cell(name: str, multi_pod: bool, verbose: bool = True) ->
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
-    rcfg = REGISTRATION_GRIDS[name]
+    rcfg = rcfg or REGISTRATION_GRIDS[name]
     grid = make_grid(rcfg.grid)
     axes = (("pod", "data"), "model") if multi_pod else ("data", "model")
     ctx = DistContext(grid, mesh, axes=axes, halo=rcfg.halo)
@@ -426,6 +426,85 @@ def lower_registration_cell(name: str, multi_pod: bool, verbose: bool = True) ->
     return rec
 
 
+def lower_multilevel_cell(name: str, multi_pod: bool, verbose: bool = True, rcfg=None) -> dict:
+    """Lower+compile every level of a coarse-to-fine ladder on the mesh.
+
+    Per level: the GN ``newton_iteration`` program on the level's derived
+    ``DistContext`` (coarse matvecs are 8-64x cheaper — the grid-continuation
+    lever) plus the spectral prolongation program that carries the warm start
+    up the ladder (pencil-FFT truncation/zero-pad; its all-to-all bytes are
+    the ladder's only extra communication).
+    """
+    from repro.core import gauss_newton as gn
+    from repro.core import objective as obj
+    from repro.core.grid import make_grid
+    from repro.dist.context import DistContext
+    from repro.multilevel import transfer
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rcfg = rcfg or REGISTRATION_GRIDS[name]
+    if not rcfg.levels:
+        raise ValueError(f"{name} has no multilevel ladder configured")
+    axes = (("pod", "data"), "model") if multi_pod else ("data", "model")
+    fine_grid = make_grid(rcfg.grid)
+    fine_ctx = DistContext(fine_grid, mesh, axes=axes, halo=rcfg.halo)
+    cfg = gn.GNConfig(beta=rcfg.beta, n_t=rcfg.n_t, incompressible=rcfg.incompressible)
+
+    rec = {
+        "arch": name,
+        "shape": "x".join(map(str, rcfg.grid)),
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": "multilevel_ladder",
+        "status": "ok",
+        "levels": [],
+    }
+    prev_ctx = None
+    for shape in rcfg.levels:
+        shape = tuple(shape)
+        grid = fine_grid if shape == fine_grid.shape else make_grid(shape)
+        ctx = fine_ctx if shape == fine_grid.shape else fine_ctx.coarsen(shape)
+
+        def reg_step(v, g0, rho_R, rho_T, _grid=grid, _ctx=ctx):
+            prob = obj.Problem(
+                grid=_grid, rho_R=rho_R, rho_T=rho_T, beta=rcfg.beta,
+                n_t=rcfg.n_t, incompressible=rcfg.incompressible,
+            )
+            return gn.newton_iteration(v, g0, prob, _ctx.ops, cfg, interp=_ctx.interp)
+
+        vshape = jax.ShapeDtypeStruct((3,) + grid.shape, jnp.float32, sharding=ctx.vector_sharding())
+        sshape = jax.ShapeDtypeStruct(grid.shape, jnp.float32, sharding=ctx.scalar_sharding())
+        g0 = jax.ShapeDtypeStruct((), jnp.float32, sharding=NamedSharding(mesh, P()))
+        t0 = time.time()
+        compiled = jax.jit(reg_step, donate_argnums=(0,)).lower(vshape, g0, sshape, sshape).compile()
+        t_newton = time.time() - t0
+        level_rec = {
+            "shape": list(shape),
+            "t_compile_s": round(t_newton, 2),
+            "memory": rl.memory_analysis_dict(compiled),
+            "fine_equiv_matvec_weight": grid.num_points / fine_grid.num_points,
+        }
+
+        if prev_ctx is not None:  # the warm-start prolongation program
+            pv = jax.ShapeDtypeStruct(
+                (3,) + prev_ctx.grid.shape, jnp.float32, sharding=prev_ctx.vector_sharding()
+            )
+            cp = jax.jit(
+                lambda v, _a=prev_ctx.ops, _b=ctx.ops: transfer.prolong(v, _a, _b)
+            ).lower(pv).compile()
+            _, coll = rl.analyze_compiled(cp, chips=chips)
+            level_rec["prolong_collectives"] = {
+                k: v for k, v in coll.items() if isinstance(v, dict) and v["count"]
+            }
+        rec["levels"].append(level_rec)
+        prev_ctx = ctx
+        if verbose:
+            print(f"--- {name} level {shape} on {rec['mesh']} ---")
+            print("memory_analysis:", level_rec["memory"])
+    return rec
+
+
 # --------------------------------------------------------------------------- #
 def main():
     ap = argparse.ArgumentParser()
@@ -459,9 +538,15 @@ def main():
 
     for mp in meshes:
         if args.registration:
-            regs = ["claire-256", "claire-512", "claire-1024", "claire-256-inc", "claire-brain"]
+            regs = [
+                "claire-256", "claire-512", "claire-1024", "claire-256-inc",
+                "claire-brain", "claire-256-ml", "claire-512-ml",
+            ]
             for name in regs:
-                run(lower_registration_cell, name, mp)
+                if REGISTRATION_GRIDS[name].levels:
+                    run(lower_multilevel_cell, name, mp)
+                else:
+                    run(lower_registration_cell, name, mp)
         if args.all:
             for arch in list_archs():
                 for shape in SHAPES:

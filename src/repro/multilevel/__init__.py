@@ -1,0 +1,25 @@
+"""repro.multilevel — coarse-to-fine grid continuation for the GN-Krylov solver.
+
+The paper solves at a fixed grid; its successors (CLAIRE, 1808.04487;
+inexact Newton-Krylov, 1408.6299) buy most of the nonlinear progress at
+coarse resolution where every Hessian matvec is 8-64x cheaper.  This
+package adds that layer on top of ``repro.core``:
+
+    transfer.py   spectral restriction/prolongation between Grids
+    hierarchy.py  GridHierarchy / MultilevelConfig (the level ladder)
+    driver.py     multilevel.solve(): restrict -> solve -> prolong warm start
+    precond.py    two-level PCG preconditioner (coarse Hessian + smoother)
+"""
+from repro.multilevel.driver import solve
+from repro.multilevel.hierarchy import GridHierarchy, MultilevelConfig
+from repro.multilevel.precond import make_two_level_precond
+from repro.multilevel.transfer import prolong, restrict
+
+__all__ = [
+    "solve",
+    "GridHierarchy",
+    "MultilevelConfig",
+    "make_two_level_precond",
+    "prolong",
+    "restrict",
+]

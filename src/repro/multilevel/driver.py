@@ -1,0 +1,154 @@
+"""Coarse-to-fine grid continuation driver.
+
+``multilevel.solve`` restricts the image pair down the ladder, runs the
+Gauss-Newton-Krylov solver per level (coarsest first), and prolongs each
+level's velocity as the warm start of the next — interleaving the beta-
+continuation schedule across levels (coarse levels absorb the large-beta
+solves).  Convergence of warm-started levels is measured against the
+*cold-start* gradient norm of that level, so the finest level terminates
+at exactly the tolerance a single-level solve would — just with most of
+the Newton progress already bought at 8-64x cheaper matvecs.
+
+Runs single-device (``SpectralOps`` per level) or on the production mesh:
+pass the fine ``DistContext`` and every coarse level derives its own
+context on the same mesh (``ctx.coarsen``), with the spectral transfer
+re-sharding through the pencil FFTs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gauss_newton as gn
+from repro.core import objective as obj
+from repro.core.grid import Grid
+from repro.core.spectral import SpectralOps
+from repro.multilevel import transfer
+from repro.multilevel.hierarchy import GridHierarchy, MultilevelConfig
+from repro.multilevel.precond import make_two_level_precond
+
+
+def _cold_gradient_norm(rho_R, rho_T, grid, lcfg, ops, interp):
+    """|g(v=0)| — beta-independent (the reg term vanishes at v=0)."""
+    prob = obj.Problem(
+        grid=grid, rho_R=rho_R, rho_T=rho_T, beta=lcfg.beta, n_t=lcfg.n_t,
+        incompressible=lcfg.incompressible,
+    )
+    state = jax.jit(
+        lambda v: obj.newton_state(v, prob, ops, interp)
+    )(jnp.zeros((3,) + grid.shape, grid.dtype))
+    return float(jnp.sqrt(grid.norm_sq(state.g)))
+
+
+def solve(
+    rho_R: jnp.ndarray,
+    rho_T: jnp.ndarray,
+    grid: Grid,
+    cfg: MultilevelConfig,
+    *,
+    ops: SpectralOps | None = None,
+    ctx=None,
+    v0: jnp.ndarray | None = None,
+    verbose: bool = False,
+    callback=None,
+):
+    """Coarse-to-fine registration solve; returns the ``gn.solve`` dict plus
+    per-level statistics (``levels``, ``fine_matvecs``, ``fine_equiv_matvecs``)."""
+    hier = GridHierarchy(grid, cfg)
+    n_levels = len(hier)
+
+    if ctx is not None:
+        contexts = [
+            ctx if g.shape == grid.shape else ctx.coarsen(g.shape) for g in hier.grids
+        ]
+        level_ops = [c.ops for c in contexts]
+        level_interp = [c.interp for c in contexts]
+    else:
+        fine_ops = ops or SpectralOps(grid)
+        level_ops = [
+            fine_ops if g.shape == grid.shape else SpectralOps(g) for g in hier.grids
+        ]
+        level_interp = [None] * n_levels
+
+    fine_ops = level_ops[-1]
+    restrict_images = transfer.smooth_restrict if cfg.presmooth else transfer.restrict
+
+    history: list[dict] = []
+    levels: list[dict] = []
+    v = v0
+    for lv in range(n_levels):
+        lgrid, lops, linterp = hier.grids[lv], level_ops[lv], level_interp[lv]
+        lcfg = hier.level_config(lv)
+        if lgrid.shape == grid.shape:
+            rho_R_l, rho_T_l = rho_R, rho_T
+        else:
+            rho_R_l = restrict_images(rho_R, fine_ops, lops)
+            rho_T_l = restrict_images(rho_T, fine_ops, lops)
+
+        warm = v is not None
+        if warm and lv > 0:
+            v = transfer.prolong(v, level_ops[lv - 1], lops)
+        elif warm and lgrid.shape != grid.shape:
+            v = transfer.restrict(v, fine_ops, lops)  # fine-grid v0 caller input
+        g0_ref = (
+            _cold_gradient_norm(rho_R_l, rho_T_l, lgrid, lcfg, lops, linterp)
+            if warm
+            else None
+        )
+
+        precond = None
+        if cfg.two_level_precond and lv > 0:
+            prob_l = obj.Problem(
+                grid=lgrid, rho_R=rho_R_l, rho_T=rho_T_l, beta=lcfg.beta,
+                n_t=lcfg.n_t, incompressible=lcfg.incompressible,
+            )
+            precond = make_two_level_precond(
+                prob_l, lops, level_ops[lv - 1],
+                n_cg=cfg.precond_cg_iters,
+                interp_coarse=level_interp[lv - 1],
+            )
+
+        def level_cb(it, rec, _lv=lv, _shape=lgrid.shape):
+            rec["level"] = _lv
+            rec["shape"] = list(_shape)
+            if callback:
+                callback(it, rec)
+
+        if verbose:
+            print(f"=== level {lv}/{n_levels - 1}: {lgrid.shape} "
+                  f"betas={hier.betas[lv]} warm={warm} ===")
+        t0 = time.time()
+        out = gn.solve(
+            rho_R_l, rho_T_l, lgrid, lcfg,
+            ops=lops, v0=v, verbose=verbose, callback=level_cb, interp=linterp,
+            precond=precond, g0_ref=g0_ref,
+        )
+        wall = time.time() - t0
+        v = out["v"]
+        history.extend(out["history"])
+        levels.append(
+            {
+                "level": lv,
+                "shape": list(lgrid.shape),
+                "betas": [float(b) for b in hier.betas[lv]],
+                "warm_start": warm,
+                "newton_iters": out["newton_iters"],
+                "hessian_matvecs": out["hessian_matvecs"],
+                "fine_equiv_matvecs": out["hessian_matvecs"] * hier.fine_equiv_weight(lv),
+                "wall_s": wall,
+                "rel_gnorm": out["history"][-1]["rel_gnorm"] if out["history"] else None,
+            }
+        )
+
+    return {
+        "v": v,
+        "history": history,
+        "newton_iters": sum(l["newton_iters"] for l in levels),
+        "hessian_matvecs": sum(l["hessian_matvecs"] for l in levels),
+        "fine_matvecs": levels[-1]["hessian_matvecs"],
+        "fine_equiv_matvecs": sum(l["fine_equiv_matvecs"] for l in levels),
+        "levels": levels,
+        "grids": [list(g.shape) for g in hier.grids],
+    }

@@ -109,6 +109,95 @@ def test_multipod_tuple_axis_pencil():
     )
 
 
+def test_distributed_incompressible_gn_matches_local():
+    """Leray/`ksq_d` on the PencilFFT backend: the incompressible GN
+    iteration on the mesh is pinned to the local solver."""
+    _run(
+        """
+        from functools import partial
+        from repro.core.grid import make_grid
+        from repro.core.spectral import SpectralOps
+        from repro.core import objective as obj, gauss_newton as gn
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        from repro.data import synthetic
+        rho_R, rho_T, v_star, grid = synthetic.synthetic_problem(16, incompressible=True, amplitude=0.5)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        ctx = DistContext(grid, mesh, halo=4)
+        local = SpectralOps(grid)
+        cfg = gn.GNConfig(incompressible=True)
+        prob_l = obj.Problem(grid, rho_R, rho_T, 1e-2, 4, True)
+        prob_d = obj.Problem(grid, ctx.shard_scalar(rho_R), ctx.shard_scalar(rho_T), 1e-2, 4, True)
+        v0 = jnp.zeros((3,)+grid.shape, jnp.float32)
+        vl, ll = jax.jit(partial(gn.newton_iteration, prob=prob_l, ops=local, cfg=cfg))(v0, jnp.float32(1))
+        vd, ld = jax.jit(partial(gn.newton_iteration, prob=prob_d, ops=ctx.ops, cfg=cfg, interp=ctx.interp))(
+            ctx.shard_vector(v0), jnp.float32(1))
+        assert float(jnp.max(jnp.abs(vl - vd))) < 1e-4
+        assert int(ll.cg_iters) == int(ld.cg_iters)
+        # the step stays (discretely) divergence free on the mesh
+        assert float(jnp.max(jnp.abs(ctx.ops.div(vd)))) < 1e-3
+        """
+    )
+
+
+def test_halo_budget_check():
+    """Dynamic halo budget (ROADMAP): an overshooting displacement either
+    NaN-poisons (halo_check="error") or falls back to the exact global
+    gather (halo_check="gather") instead of silently reading wrapped ghosts."""
+    _run(
+        """
+        from repro.core.grid import make_grid
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        from repro.kernels import ref
+        mesh = make_mesh((2, 4), ("data", "model"))
+        grid = make_grid((16, 16, 32))
+        halo = 4
+        rng = np.random.default_rng(0)
+        f = jnp.asarray(rng.standard_normal(grid.shape), jnp.float32)
+        d_ok = jnp.asarray(rng.uniform(-halo+0.01, halo-0.01, (3,)+grid.shape), jnp.float32)
+        d_bad = d_ok.at[0, 0, 0, 0].set(halo + 2.5)
+
+        ctx = DistContext(grid, mesh, halo=halo)  # default: halo_check="error"
+        put = lambda c, d: (c.shard_scalar(f), jax.device_put(d, c.vector_sharding()))
+        ok_out = jax.jit(ctx.interp)(*put(ctx, d_ok))
+        assert float(jnp.max(jnp.abs(ok_out - ref.tricubic_displace(f, d_ok)))) < 1e-4
+        assert bool(jnp.all(jnp.isnan(jax.jit(ctx.interp)(*put(ctx, d_bad)))))
+
+        ctx_g = DistContext(grid, mesh, halo=halo, halo_check="gather")
+        bad_out = jax.jit(ctx_g.interp)(*put(ctx_g, d_bad))
+        assert float(jnp.max(jnp.abs(bad_out - ref.tricubic_displace(f, d_bad)))) < 1e-4
+        """
+    )
+
+
+def test_mini_registration_dryrun_cells():
+    """The registration dry-run machinery (single-level incompressible +
+    multilevel ladder) end-to-end on the shrunken 8-device mesh."""
+    _run(
+        """
+        import repro.launch.dryrun as dr
+        from repro.launch import mesh as meshmod
+        meshmod.make_production_mesh = lambda multi_pod=False: (
+            jax.make_mesh((2,2,2), ("pod","data","model")) if multi_pod
+            else jax.make_mesh((2,4), ("data","model")))
+        dr.make_production_mesh = meshmod.make_production_mesh
+        from repro.configs.claire_registration import RegConfig
+        rcfg = RegConfig("mini-inc", (16, 16, 32), incompressible=True, halo=2)
+        rec = dr.lower_registration_cell("mini-inc", False, verbose=False, rcfg=rcfg)
+        assert rec["status"] == "ok", rec
+        assert rec["components"]["hessian_matvec"]["hbm_bytes_per_chip"] > 0
+        rcfg_ml = RegConfig("mini-ml", (16, 16, 32), halo=2,
+                            levels=((8, 8, 16), (16, 16, 32)))
+        rec2 = dr.lower_multilevel_cell("mini-ml", False, verbose=False, rcfg=rcfg_ml)
+        assert rec2["status"] == "ok", rec2
+        assert len(rec2["levels"]) == 2
+        assert rec2["levels"][0]["fine_equiv_matvec_weight"] == 0.125
+        assert rec2["levels"][1]["prolong_collectives"], rec2["levels"][1]
+        """
+    )
+
+
 def test_lm_train_step_shards_and_runs():
     """Sharded smoke-model train step on a 2x2x2 pod mesh executes and
     matches the single-device loss."""

@@ -39,3 +39,34 @@ def test_pallas_kernel_matches_halo_interp():
         assert err < 1e-4, err
         """
     )
+
+
+def test_pallas_on_mesh_matches_gather_path():
+    """ROADMAP 'Pallas halo interp on-mesh': the per-shard tricubic dispatched
+    to the Pallas kernel *inside* the shard_map body (ghost-extended block fed
+    straight to the kernel's padded-field layout) is pinned against the
+    kernels/ref.py gather path of the same exchange."""
+    run_multidevice(
+        """
+        from repro.core.grid import make_grid
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+
+        halo = 4
+        mesh = make_mesh((2, 4), ("data", "model"))
+        grid = make_grid((16, 16, 32))
+        rng = np.random.default_rng(2)
+        f = jnp.asarray(rng.standard_normal(grid.shape), jnp.float32)
+        d = jnp.asarray(
+            rng.uniform(-halo + 0.01, halo - 0.01, (3,) + grid.shape), jnp.float32
+        )
+        ctx_ref = DistContext(grid, mesh, halo=halo, interp_method="ref", halo_check="off")
+        ctx_pal = DistContext(grid, mesh, halo=halo, interp_method="pallas", halo_check="off")
+        args_ref = (ctx_ref.shard_scalar(f), jax.device_put(d, ctx_ref.vector_sharding()))
+        args_pal = (ctx_pal.shard_scalar(f), jax.device_put(d, ctx_pal.vector_sharding()))
+        out_ref = jax.jit(ctx_ref.interp)(*args_ref)
+        out_pal = jax.jit(ctx_pal.interp)(*args_pal)
+        err = float(jnp.max(jnp.abs(out_ref - out_pal)))
+        assert err < 1e-4, err
+        """
+    )

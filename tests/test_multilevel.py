@@ -1,0 +1,258 @@
+"""repro.multilevel: spectral transfer operators, grid hierarchy, and the
+coarse-to-fine solver (local fast tier + 8-device mesh cases).
+
+The solve test doubles as the measured coarse-to-fine record: the counts it
+pins (same gtol as single-level, strictly fewer fine-grid Hessian matvecs)
+are written to BENCH_multilevel.json at the repo root.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+from repro.core import gauss_newton as gn
+from repro.core.grid import make_grid
+from repro.core.spectral import SpectralOps, mode_indices, nyquist_mask
+from repro.data import synthetic
+from repro import multilevel
+from repro.multilevel import transfer
+from repro.multilevel.hierarchy import GridHierarchy, MultilevelConfig, split_beta_schedule
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------------------------- #
+# transfer operators
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def grids():
+    gf, gc = make_grid((16, 12, 24)), make_grid((8, 6, 12))
+    return gf, gc, SpectralOps(gf), SpectralOps(gc)
+
+
+def test_mode_indices_and_mask():
+    idx = mode_indices(16, 8)
+    assert list(idx) == [0, 1, 2, 3, 12, 13, 14, 15]
+    assert list(mode_indices(16, 8, rfft=True)) == [0, 1, 2, 3, 4]
+    m = nyquist_mask(16, 8)
+    assert m[4] == 0.0 and m.sum() == 7
+    assert nyquist_mask(16, 16).sum() == 16  # no truncation -> no masking
+
+
+def test_restrict_prolong_adjoint(grids, rng):
+    """<R f, g>_coarse == <f, P g>_fine under cell-volume inner products."""
+    gf, gc, of, oc = grids
+    f = jnp.asarray(rng.standard_normal(gf.shape), jnp.float32)
+    g = jnp.asarray(rng.standard_normal(gc.shape), jnp.float32)
+    a = float(gc.inner(transfer.restrict(f, of, oc), g))
+    b = float(gf.inner(f, transfer.prolong(g, oc, of)))
+    assert abs(a - b) < 1e-5 * max(1.0, abs(a))
+
+
+def test_coarse_roundtrip_identity(grids, rng):
+    """restrict(prolong(g)) == g for band-limited (Nyquist-free) coarse g."""
+    gf, gc, of, oc = grids
+    g = transfer.restrict(jnp.asarray(rng.standard_normal(gf.shape), jnp.float32), of, oc)
+    rt = transfer.restrict(transfer.prolong(g, oc, of), of, oc)
+    assert float(jnp.max(jnp.abs(rt - g))) < 1e-5
+
+
+def test_transfer_exact_on_resolved_modes(grids):
+    """Both directions are exact band-limited interpolation/sampling."""
+    gf, gc, of, oc = grids
+    xf, xc = gf.coords_jnp(), gc.coords_jnp()
+    low_f = jnp.sin(2 * xf[0]) * jnp.cos(xf[1]) + jnp.cos(2 * xf[2])
+    low_c = jnp.sin(2 * xc[0]) * jnp.cos(xc[1]) + jnp.cos(2 * xc[2])
+    assert float(jnp.max(jnp.abs(transfer.restrict(low_f, of, oc) - low_c))) < 1e-5
+    assert float(jnp.max(jnp.abs(transfer.prolong(low_c, oc, of) - low_f))) < 1e-5
+
+
+def test_transfer_vector_fields(grids, rng):
+    """Leading axes (velocity components) pass through both directions."""
+    gf, gc, of, oc = grids
+    v = jnp.asarray(rng.standard_normal((3,) + gf.shape), jnp.float32)
+    rv = transfer.restrict(v, of, oc)
+    assert rv.shape == (3,) + gc.shape
+    for i in range(3):
+        assert float(jnp.max(jnp.abs(rv[i] - transfer.restrict(v[i], of, oc)))) < 1e-6
+    pv = transfer.prolong(rv, oc, of)
+    assert pv.shape == v.shape
+
+
+# --------------------------------------------------------------------------- #
+# hierarchy
+# --------------------------------------------------------------------------- #
+def test_hierarchy_auto_halving():
+    h = GridHierarchy(make_grid(32), MultilevelConfig(n_levels=3, min_size=8))
+    assert [g.shape for g in h.grids] == [(8, 8, 8), (16, 16, 16), (32, 32, 32)]
+    assert h.fine_equiv_weight(0) == pytest.approx(1 / 64)
+    h2 = GridHierarchy(make_grid(16), MultilevelConfig(n_levels=4, min_size=8))
+    assert [g.shape for g in h2.grids] == [(8, 8, 8), (16, 16, 16)]  # floor hit
+
+
+def test_hierarchy_explicit_shapes_validation():
+    with pytest.raises(ValueError):
+        GridHierarchy(make_grid(32), MultilevelConfig(shapes=((16,) * 3, (24,) * 3)))
+    with pytest.raises(ValueError):
+        GridHierarchy(make_grid(32), MultilevelConfig(shapes=((64,) * 3, (32,) * 3)))
+
+
+def test_beta_schedule_split():
+    assert split_beta_schedule((1e-1, 1e-2, 1e-3), 2) == ((1e-1,), (1e-2, 1e-3))
+    assert split_beta_schedule((1e-2,), 3) == ((1e-2,), (1e-2,), (1e-2,))
+    cfg = MultilevelConfig(
+        solver=gn.GNConfig(beta=1e-3, beta_continuation=(1e-1, 1e-2)), n_levels=2
+    )
+    h = GridHierarchy(make_grid(16), cfg)
+    assert h.level_config(0).beta == 1e-1
+    assert h.level_config(1).beta == 1e-3
+    assert h.level_config(1).beta_continuation == (1e-2,)
+
+
+def test_level_overrides():
+    cfg = MultilevelConfig(
+        solver=gn.GNConfig(max_cg=50), n_levels=2, level_overrides=({"max_cg": 10},)
+    )
+    h = GridHierarchy(make_grid(16), cfg)
+    assert h.level_config(0).max_cg == 10 and h.level_config(1).max_cg == 50
+
+
+# --------------------------------------------------------------------------- #
+# coarse-to-fine solve: the acceptance pin + the measured record
+# --------------------------------------------------------------------------- #
+def test_multilevel_solve_fewer_fine_matvecs():
+    """Same gtol as single-level, strictly fewer fine-grid Hessian matvecs;
+    measured counts emitted to BENCH_multilevel.json."""
+    import sys
+
+    sys.path.insert(0, ROOT)
+    from benchmarks import multilevel_c2f
+
+    rec = multilevel_c2f.measure(n=24, beta=1e-2, gtol=1e-2, n_levels=2)
+    single, ml = rec["single_level"], rec["multilevel"]
+
+    assert single["rel_gnorm"] <= 1e-2 + 1e-6
+    assert ml["rel_gnorm"] <= 1e-2 + 1e-6  # same gtol, vs the cold-start g0
+    # warm-started fine level: strictly fewer fine-grid matvecs ...
+    assert ml["fine_grid_matvecs"] < single["hessian_matvecs"]
+    # ... and cheaper even with the coarse level charged at its point ratio
+    assert ml["fine_equiv_matvecs"] < single["hessian_matvecs"]
+    assert ml["levels"][-1]["warm_start"] and not ml["levels"][0]["warm_start"]
+
+    multilevel_c2f.write_record(rec)
+    assert os.path.exists(os.path.join(ROOT, "BENCH_multilevel.json"))
+
+
+def test_multilevel_matches_single_level_solution():
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
+    base = gn.GNConfig(beta=1e-2, n_t=4, max_newton=8, gtol=1e-2, max_cg=30)
+    single = gn.solve(rho_R, rho_T, grid, base)
+    ml = multilevel.solve(rho_R, rho_T, grid, MultilevelConfig(solver=base, n_levels=2))
+    err = float(jnp.max(jnp.abs(ml["v"] - single["v"])))
+    scale = float(jnp.max(jnp.abs(single["v"])))
+    assert err < 0.05 * scale, (err, scale)
+
+
+def test_register_multilevel_pipeline():
+    """End-to-end register() with the multilevel config: diffeomorphic map."""
+    from repro.core.registration import RegistrationConfig, register
+
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
+    cfg = RegistrationConfig(
+        multilevel=MultilevelConfig(
+            solver=gn.GNConfig(beta=1e-2, n_t=4, max_newton=8, gtol=1e-2, max_cg=30),
+            n_levels=2,
+        )
+    )
+    out = register(rho_R, rho_T, cfg, grid=grid)
+    assert out["history"][-1]["rel_gnorm"] <= 1e-2 + 1e-6
+    assert out["det_min"] > 0.0
+    assert len(out["levels"]) == 2
+    assert out["residual_rel"] < 0.7
+
+
+def test_two_level_preconditioner_cuts_fine_cg():
+    """beta small (data-dominated Hessian): the coarse-grid block beats the
+    pure spectral preconditioner on fine-grid matvec count."""
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
+    base = gn.GNConfig(beta=1e-4, n_t=4, max_newton=6, gtol=1e-2, max_cg=200)
+    counts = {}
+    for tl in (False, True):
+        cfg = MultilevelConfig(
+            solver=base, n_levels=2, two_level_precond=tl, precond_cg_iters=4
+        )
+        out = multilevel.solve(rho_R, rho_T, grid, cfg)
+        assert out["history"][-1]["rel_gnorm"] <= 1e-2 + 1e-6
+        counts[tl] = out["fine_matvecs"]
+    assert counts[True] < counts[False], counts
+
+
+# --------------------------------------------------------------------------- #
+# distributed: same operators on the 8-device mesh
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+@pytest.mark.dist
+def test_transfer_adjoint_and_roundtrip_on_mesh():
+    run_multidevice(
+        """
+        from repro.core.grid import make_grid
+        from repro.core.spectral import SpectralOps
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        from repro.multilevel import transfer
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        gf, gc = make_grid((16, 16, 32)), make_grid((8, 8, 16))
+        ctx_f = DistContext(gf, mesh, halo=4)
+        ctx_c = ctx_f.coarsen(gc.shape)
+        lf, lc = SpectralOps(gf), SpectralOps(gc)
+        rng = np.random.default_rng(0)
+        f = jnp.asarray(rng.standard_normal(gf.shape), jnp.float32)
+        g = jnp.asarray(rng.standard_normal(gc.shape), jnp.float32)
+        fs = ctx_f.shard_scalar(f); gs = ctx_c.shard_scalar(g)
+
+        Rf = jax.jit(lambda x: transfer.restrict(x, ctx_f.ops, ctx_c.ops))(fs)
+        Pg = jax.jit(lambda x: transfer.prolong(x, ctx_c.ops, ctx_f.ops))(gs)
+        # pinned to the local (rfft) implementation
+        assert float(jnp.max(jnp.abs(Rf - transfer.restrict(f, lf, lc)))) < 1e-5
+        assert float(jnp.max(jnp.abs(Pg - transfer.prolong(g, lc, lf)))) < 1e-5
+        # adjointness + roundtrip on the mesh
+        a = float(gc.inner(Rf, gs)); b = float(gf.inner(fs, Pg))
+        assert abs(a - b) < 1e-5 * max(1.0, abs(a)), (a, b)
+        rt = jax.jit(lambda x: transfer.restrict(
+            transfer.prolong(x, ctx_c.ops, ctx_f.ops), ctx_f.ops, ctx_c.ops))(Rf)
+        assert float(jnp.max(jnp.abs(rt - Rf))) < 1e-5
+        """
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.dist
+def test_multilevel_solve_on_mesh_matches_local():
+    run_multidevice(
+        """
+        from repro.core import gauss_newton as gn
+        from repro.data import synthetic
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        from repro import multilevel
+        from repro.multilevel.hierarchy import MultilevelConfig
+
+        rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        ctx = DistContext(grid, mesh, halo=4)
+        cfg = MultilevelConfig(
+            solver=gn.GNConfig(beta=1e-2, n_t=4, max_newton=6, gtol=1e-2, max_cg=30),
+            n_levels=2,
+        )
+        out_d = multilevel.solve(ctx.shard_scalar(rho_R), ctx.shard_scalar(rho_T),
+                                 grid, cfg, ctx=ctx)
+        out_l = multilevel.solve(rho_R, rho_T, grid, cfg)
+        assert out_d["history"][-1]["rel_gnorm"] <= 1e-2 + 1e-6
+        err = float(jnp.max(jnp.abs(out_d["v"] - out_l["v"])))
+        assert err < 1e-3, err
+        assert [l["shape"] for l in out_d["levels"]] == [[8]*3, [16]*3]
+        """
+    )
