@@ -29,6 +29,20 @@ def main():
         pts = n**3
         emit(f"kernel/tricubic_ref_N{n}", t * 1e6, f"{pts/t/1e6:.1f} Mpts/s (CPU)")
 
+        # batched-channel + plan-reuse columns (ISSUE 3: the full sweep with
+        # the mesh exchange counts is `benchmarks.run --suite interp`)
+        c = 3
+        fc = jnp.asarray(rng.standard_normal((c, n, n, n)), jnp.float32)
+        tb = time_fn(jax.jit(ref.tricubic_displace_many), fc, d)
+        emit(f"kernel/tricubic_batched_C{c}_N{n}", tb * 1e6,
+             f"{c*pts/tb/1e6:.1f} Mpts/s;vs-looped={c*t/tb:.2f}x")
+        plan = jax.jit(ref.make_interp_plan)(d)
+        tp = time_fn(jax.jit(ref.interp_apply), fc, plan)
+        tplan = time_fn(jax.jit(ref.make_interp_plan), d)
+        emit(f"kernel/tricubic_planned_C{c}_N{n}", tp * 1e6,
+             f"{c*pts/tp/1e6:.1f} Mpts/s;plan-build={tplan*1e6:.0f}us "
+             f"(amortized over a Newton iteration)")
+
     # Pallas kernel: structural cost on TPU v5e
     # direct gather model (paper): 64 loads * 4B + ~600 flops / point
     t_mem_direct = (64 * 4) / HBM

@@ -14,6 +14,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    interp_suite,
     kernel_microbench,
     lm_roofline,
     multilevel_c2f,
@@ -27,6 +28,7 @@ TABLES = {
     "table3": table3_incompressible.main,
     "table5": table5_beta.main,
     "kernel": kernel_microbench.main,
+    "interp": interp_suite.main,
     "lm_roofline": lm_roofline.main,
     "multilevel": multilevel_c2f.main,
 }

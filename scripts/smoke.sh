@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 smoke: the fast test tier plus one tiny coarse-to-fine registration
-# end-to-end (restrict -> coarse GN solve -> prolong warm start -> fine GN
-# solve -> diffeomorphism check).  Total budget ~2.5 min on the CPU container.
+# Tier-1 smoke: the fast test tier, the interp microbench at toy size
+# (plan/batch/ghost-exchange regressions fail fast: the suite asserts the
+# counted collective-permute structure on every run), plus one tiny
+# coarse-to-fine registration end-to-end (restrict -> coarse GN solve ->
+# prolong warm start -> fine GN solve -> diffeomorphism check).  Total
+# budget ~3 min on the CPU container.
 #
 #     bash scripts/smoke.sh
 set -euo pipefail
@@ -9,6 +12,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -x -q -m "not slow"
+
+# toy-size interp suite: writes results/BENCH_interp_toy.json (gitignored),
+# never the committed BENCH_interp.json record
+BENCH_INTERP_TOY=1 python -m benchmarks.run --suite interp
 
 python - <<'EOF'
 import jax.numpy as jnp

@@ -99,7 +99,10 @@ def pcg(
 def _interp_fn(cfg: GNConfig):
     from repro.kernels import ops as kops
 
-    return partial(kops.tricubic_displace, method=cfg.interp_method)
+    # plan-aware executor: core.planner.make_plan caches an InterpPlan per
+    # departure field through it, so every PCG Hessian matvec / line-search
+    # transport of an iteration reuses precomputed interpolation weights
+    return kops.make_interp(method=cfg.interp_method)
 
 
 def newton_iteration(

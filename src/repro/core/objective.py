@@ -6,12 +6,16 @@
 
 ``P`` is the Leray projection in incompressible mode, identity otherwise.
 A ``NewtonState`` caches everything reusable across the PCG matvecs of one
-Newton iteration: the SL plan (departure points), the state series rho(t),
-and — a deliberate memory-for-FFTs trade documented in EXPERIMENTS §Perf —
-the spectral gradients grad rho(t_k) for all k.  With that cache a GN
-Hessian matvec in incompressible mode needs *zero* transport FFTs (only the
-regularization/Leray diagonal ops), versus 8 n_t in the paper's Alg. 2
-accounting.
+Newton iteration: the SL plan (departure points AND the precomputed
+``InterpPlan`` interpolation operators — base indices + separable Lagrange
+weights, built once by ``planner.make_plan`` and bound per transport by
+``semilag._bind``), the state series rho(t), and — a deliberate
+memory-for-FFTs trade documented in EXPERIMENTS §Perf — the spectral
+gradients grad rho(t_k) for all k.  With those caches a GN Hessian matvec
+in incompressible mode needs *zero* transport FFTs and *zero* interpolation
+weight constructions (only the gathers/contractions themselves plus the
+regularization/Leray diagonal ops), versus 8 n_t FFTs in the paper's
+Alg. 2 accounting.
 """
 from __future__ import annotations
 
@@ -58,7 +62,10 @@ def evaluate_objective(
 ):
     """J(v) — one forward transport + one spectral regularization energy."""
     if plan is None:
-        plan = make_plan(v, prob.grid, ops, prob.n_t, prob.incompressible, interp)
+        # forward-only plan: line-search trials never transport backward
+        plan = make_plan(
+            v, prob.grid, ops, prob.n_t, prob.incompressible, interp, adjoint=False
+        )
     rho_series = semilag.transport_state(prob.rho_T, plan, interp)
     rho1 = rho_series[-1]
     misfit = 0.5 * prob.grid.norm_sq(rho1 - prob.rho_R)

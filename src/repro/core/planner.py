@@ -3,32 +3,47 @@
 The paper computes departure points and communication plans *once per
 velocity field per Newton iteration* ("interpolation planner") and reuses
 them across every transport solve of that iteration (state, adjoint, all
-PCG Hessian matvecs).  We reproduce exactly that: an ``SLPlan`` holds the
-RK2 departure displacements for +v (state / incremental state) and -v
-(adjoint / incremental adjoint), plus ``div v`` for the compressible source
-terms.  In the distributed solver the plan additionally fixes the halo
-width for the ghost-layer exchange (the TPU analogue of Algorithm 1's
-scatter phase).
+PCG Hessian matvecs).  We reproduce exactly that, in two layers:
+
+* ``SLPlan`` holds the RK2 departure displacements for +v (state /
+  incremental state) and -v (adjoint / incremental adjoint), plus
+  ``div v`` for the compressible source terms.
+* each displacement additionally carries a precomputed ``InterpPlan``
+  (``kernels/ref.py``): per-point stencil base offsets + separable Lagrange
+  weights — the ~600-flop §III-C2 weight construction paid once per Newton
+  iteration instead of once per interp call.  ``core.semilag`` binds these
+  cached operators through the interp protocol (``interp.apply_plan``), so
+  the PCG Hessian matvecs, the adjoint sweep, and the line-search
+  re-transports all hit precomputed weights.
+
+In the distributed solver the plan also fixes the halo width for the
+ghost-layer exchange (the TPU analogue of Algorithm 1's scatter phase);
+``InterpPlan.halo_need`` caches the bound so the runtime budget check of
+``dist.halo.make_checked_interp`` is free per apply.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.grid import Grid
 from repro.kernels import ops as kops
+from repro.kernels import ref
 
 
 class SLPlan(NamedTuple):
     """Everything reusable across transport solves for a fixed velocity."""
 
     disp_fwd: jnp.ndarray  # (3,N1,N2,N3) departure displacement for +v, grid units
-    disp_adj: jnp.ndarray  # same for -v
+    disp_adj: jnp.ndarray | None  # same for -v (None in forward-only plans)
     divv: jnp.ndarray | None  # div v on the grid (None in incompressible mode)
     dt: float
     n_t: int
+    # precomputed interpolation operators (None when the interp callable
+    # does not implement the plan protocol — e.g. ad-hoc test stubs)
+    iplan_fwd: ref.InterpPlan | None = None
+    iplan_adj: ref.InterpPlan | None = None
 
 
 def departure_displacement(v: jnp.ndarray, grid: Grid, dt: float, interp=None) -> jnp.ndarray:
@@ -38,16 +53,18 @@ def departure_displacement(v: jnp.ndarray, grid: Grid, dt: float, interp=None) -
 
     ``v`` is in physical units on Omega=[0,2pi)^3; the returned displacement
     is ``(X - x)/h`` per dimension so interpolation kernels can use it
-    directly.
+    directly.  The three velocity components ride ONE batched interp call
+    (single ghost exchange on a mesh; see the batched-field contract in
+    ``repro.dist.halo``).
     """
-    interp = interp or kops.tricubic_displace
     ct = jnp.promote_types(v.dtype, jnp.float32)
     h = jnp.asarray(grid.spacing, dtype=ct).reshape(3, 1, 1, 1)
     vg = v.astype(ct) / h  # velocity in grid cells / unit time
     d_star = -dt * vg
-    # per-component scalar interpolation (unrolled: keeps distributed
-    # implementations free of vmap-over-shard_map)
-    v_star = jnp.stack([interp(vg[i], d_star) for i in range(3)])
+    if interp is None:
+        v_star = kops.tricubic_displace_many(vg, d_star)  # auto kernel dispatch
+    else:
+        v_star = interp(vg, d_star)
     return (-0.5 * dt) * (vg + v_star)
 
 
@@ -58,13 +75,31 @@ def make_plan(
     n_t: int,
     incompressible: bool,
     interp=None,
+    adjoint: bool = True,
 ) -> SLPlan:
-    """Build the per-Newton-iteration plan (one departure solve per sign)."""
+    """Build the per-Newton-iteration plan (one departure solve per sign,
+    one precomputed ``InterpPlan`` per departure field).
+
+    ``adjoint=False`` builds a forward-only plan (``disp_adj``/``iplan_adj``
+    left ``None``) — what a pure objective evaluation needs; the Armijo line
+    search probes many trial velocities and never transports backward.
+    """
     dt = 1.0 / n_t
     disp_fwd = departure_displacement(v, grid, dt, interp)
-    disp_adj = departure_displacement(-v, grid, dt, interp)
+    disp_adj = departure_displacement(-v, grid, dt, interp) if adjoint else None
     divv = None if incompressible else spectral_ops.div(v)
-    return SLPlan(disp_fwd=disp_fwd, disp_adj=disp_adj, divv=divv, dt=dt, n_t=n_t)
+    planner = ref.make_interp_plan if interp is None else getattr(interp, "make_plan", None)
+    iplan_fwd = planner(disp_fwd) if planner is not None else None
+    iplan_adj = planner(disp_adj) if planner is not None and adjoint else None
+    return SLPlan(
+        disp_fwd=disp_fwd,
+        disp_adj=disp_adj,
+        divv=divv,
+        dt=dt,
+        n_t=n_t,
+        iplan_fwd=iplan_fwd,
+        iplan_adj=iplan_adj,
+    )
 
 
 def required_halo(plan: SLPlan) -> jnp.ndarray:
@@ -73,12 +108,19 @@ def required_halo(plan: SLPlan) -> jnp.ndarray:
     ceil(max |displacement|) — the stencil's extra +-(1,2) voxels are part
     of the kernels' fixed padding.  Traced value: the distributed layer
     enforces exactly this bound at runtime — ``DistContext`` wraps its halo
-    interp with ``repro.dist.halo.make_checked_interp``, which re-derives
-    the bound per displacement field and NaN-poisons (``halo_check="error"``,
-    default) or falls back to the global gather (``"gather"``) instead of
+    interp with ``repro.dist.halo.make_checked_interp``, which reads the
+    bound off the cached ``InterpPlan.halo_need`` (or re-derives it per
+    displacement field) and NaN-poisons (``halo_check="error"``, default)
+    or falls back to the exact global gather (``"gather"``) instead of
     silently reading ring-wrapped ghost data when a line-search step
     overshoots ``DistContext.halo``.
     """
-    return jnp.ceil(
-        jnp.maximum(kops.max_displacement(plan.disp_fwd), kops.max_displacement(plan.disp_adj))
-    )
+    def need(disp, iplan):
+        if iplan is not None:
+            return iplan.halo_need
+        return jnp.ceil(kops.max_displacement(disp))
+
+    fwd = need(plan.disp_fwd, plan.iplan_fwd)
+    if plan.disp_adj is None:
+        return fwd
+    return jnp.maximum(fwd, need(plan.disp_adj, plan.iplan_adj))

@@ -4,11 +4,29 @@ Unconditionally stable RK2 along characteristics, so ``n_t = 4`` time steps
 suffice (the paper's setting) and storing all time slices is feasible —
 which the Gauss-Newton Hessian needs (eq. (5) requires rho(t) at all t).
 
-Every solver takes an ``SLPlan`` (departure points computed once per
-velocity — paper's planner) and an ``interp`` callable so the same code
-runs single-device (oracle/Pallas kernels via ``repro.kernels.ops``) and
-distributed (``repro.dist.halo.make_halo_interp``'s ghost-layer exchange,
-available pre-wired as ``DistContext.interp``).
+Every solver takes an ``SLPlan`` (departure points + precomputed
+``InterpPlan`` operators, built once per velocity — the paper's planner)
+and an ``interp`` callable so the same code runs single-device (the
+``repro.kernels.ops.Interp`` executor over the oracle/Pallas kernels) and
+distributed (``repro.dist.halo``'s ghost-layer exchange, pre-wired as
+``DistContext.interp``).
+
+Interp contract (the **batched multi-field** protocol):
+
+    interp(fields, disp)           fields (..., N1,N2,N3); leading dims are
+                                   channels evaluated at the same departure
+                                   points in one call (one ghost-exchange
+                                   round on a mesh, one kernel launch)
+    interp.make_plan(disp)         optional: precompute an InterpPlan
+    interp.apply_plan(fields, p)   optional: planned apply
+
+``_bind`` resolves the fastest available path once per transport solve:
+whenever the ``SLPlan`` carries a cached ``InterpPlan`` and the interp
+implements ``apply_plan``, every step of the scan hits precomputed weights;
+otherwise it degrades to the plain ``interp(fields, disp)`` form (which
+still batches channels).  The transports below exploit the batching by
+stacking the fields of each RK2 stage — e.g. ``lam`` with ``lam * div v``
+in the compressible adjoint — into single calls.
 
 General scheme for  d_t nu + v . grad nu = f  (paper eq. (7)):
 
@@ -24,11 +42,36 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.planner import SLPlan
-from repro.kernels import ops as kops
+from repro.kernels import ref
 
 
-def _default_interp(field, disp):
-    return kops.tricubic_displace(field, disp, method="ref")
+def _bind(interp, disp, iplan):
+    """Resolve one displacement field to a batched applier ``fields -> out``.
+
+    Preference order: cached-plan apply (planner-built operators, the
+    plan-once/apply-many fast path) > the interp's own planned path >
+    plain per-call interpolation.
+    """
+    if interp is None:
+        iplan = ref.make_interp_plan(disp) if iplan is None else iplan
+        return lambda fields: ref.interp_apply(fields, iplan)
+    apply_plan = getattr(interp, "apply_plan", None)
+    if iplan is not None and apply_plan is not None:
+        return lambda fields: apply_plan(fields, iplan)
+    return lambda fields: interp(fields, disp)
+
+
+def _bind_fwd(plan: SLPlan, interp):
+    return _bind(interp, plan.disp_fwd, plan.iplan_fwd)
+
+
+def _bind_adj(plan: SLPlan, interp):
+    if plan.disp_adj is None:
+        raise ValueError(
+            "forward-only SLPlan (make_plan(adjoint=False)) has no adjoint "
+            "departure field; rebuild with adjoint=True for backward transports"
+        )
+    return _bind(interp, plan.disp_adj, plan.iplan_adj)
 
 
 # --------------------------------------------------------------------------- #
@@ -36,10 +79,10 @@ def _default_interp(field, disp):
 # --------------------------------------------------------------------------- #
 def transport_state(rho0: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
     """Solve d_t rho + v.grad rho = 0; returns all slices (n_t+1, N1,N2,N3)."""
-    interp = interp or _default_interp
+    at_fwd = _bind_fwd(plan, interp)
 
     def step(rho, _):
-        nxt = interp(rho, plan.disp_fwd)
+        nxt = at_fwd(rho)
         return nxt, nxt
 
     _, series = jax.lax.scan(step, rho0, None, length=plan.n_t)
@@ -53,21 +96,22 @@ def transport_state(rho0: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray
 # --------------------------------------------------------------------------- #
 def transport_adjoint(lam1: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
     """Returns lam at all *t*-slices, index k = t_k (so [..., -1] is t=1)."""
-    interp = interp or _default_interp
+    at_adj = _bind_adj(plan, interp)
     dt = plan.dt
 
     if plan.divv is None:
 
         def step(lam, _):
-            nxt = interp(lam, plan.disp_adj)
+            nxt = at_adj(lam)
             return nxt, nxt
 
     else:
         divv = plan.divv
 
         def step(lam, _):
-            lam0X = interp(lam, plan.disp_adj)
-            f0X = interp(lam * divv, plan.disp_adj)
+            # lam and lam*divv share one batched interpolation (C=2):
+            # one ghost exchange on a mesh instead of two
+            lam0X, f0X = at_adj(jnp.stack([lam, lam * divv]))
             lam_star = lam0X + dt * f0X
             f_star = lam_star * divv
             nxt = lam0X + 0.5 * dt * (f0X + f_star)
@@ -89,7 +133,7 @@ def transport_inc_state(
     interp=None,
 ) -> jnp.ndarray:
     """Returns rho~(1) (only the final slice is needed for Gauss-Newton)."""
-    interp = interp or _default_interp
+    at_fwd = _bind_fwd(plan, interp)
     dt = plan.dt
     rho0 = jnp.zeros_like(grad_rho_series[0, 0])
 
@@ -99,9 +143,7 @@ def transport_inc_state(
 
     def step(carry, k):
         rt = carry
-        f0 = source(k)
-        rt0X = interp(rt, plan.disp_fwd)
-        f0X = interp(f0, plan.disp_fwd)
+        rt0X, f0X = at_fwd(jnp.stack([rt, source(k)]))  # C=2 batched
         f_star = source(k + 1)
         nxt = rt0X + 0.5 * dt * (f0X + f_star)
         return nxt, None
@@ -134,7 +176,7 @@ def transport_inc_adjoint_newton(
     spectral_ops,
     interp=None,
 ) -> jnp.ndarray:
-    interp = interp or _default_interp
+    at_adj = _bind_adj(plan, interp)
     dt = plan.dt
     n_t = plan.n_t
     divv = plan.divv  # None in incompressible mode
@@ -155,9 +197,7 @@ def transport_inc_adjoint_newton(
     def step(carry, j):
         lamt = carry
         k = n_t - j  # current t-index (tau_j = 1 - t)
-        f0 = source(lamt, k)
-        lam0X = interp(lamt, plan.disp_adj)
-        f0X = interp(f0, plan.disp_adj)
+        lam0X, f0X = at_adj(jnp.stack([lamt, source(lamt, k)]))  # C=2 batched
         lam_star = lam0X + dt * f0X
         f_star = source(lam_star, k - 1)
         nxt = lam0X + 0.5 * dt * (f0X + f_star)
@@ -173,7 +213,7 @@ def transport_inc_state_series(
 ) -> jnp.ndarray:
     """Like transport_inc_state but returns ALL slices (full Newton needs
     grad rho~(t_k) for the second b~ term)."""
-    interp = interp or _default_interp
+    at_fwd = _bind_fwd(plan, interp)
     dt = plan.dt
     rho0 = jnp.zeros_like(grad_rho_series[0, 0])
 
@@ -182,9 +222,7 @@ def transport_inc_state_series(
 
     def step(carry, k):
         rt = carry
-        f0 = source(k)
-        rt0X = interp(rt, plan.disp_fwd)
-        f0X = interp(f0, plan.disp_fwd)
+        rt0X, f0X = at_fwd(jnp.stack([rt, source(k)]))
         f_star = source(k + 1)
         nxt = rt0X + 0.5 * dt * (f0X + f_star)
         return nxt, nxt
@@ -210,17 +248,17 @@ def time_integral_b(lam_series: jnp.ndarray, grad_rho_series: jnp.ndarray, dt: f
 # --------------------------------------------------------------------------- #
 def deformation_displacement(v: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
     """Returns u(1) (3, N1,N2,N3) in *physical* units; y1 = x + u."""
-    interp = interp or _default_interp
+    at_fwd = _bind_fwd(plan, interp)
     dt = plan.dt
     u0 = jnp.zeros_like(v)
-
-    def comp_step(u_c, f_c):
-        u0X = interp(u_c, plan.disp_fwd)
-        f0X = interp(f_c, plan.disp_fwd)
-        return u0X + 0.5 * dt * (f0X + f_c)  # f is time-independent (-v)
+    f = -v
+    # f is time-independent, so f(X) is the same every step: interpolate the
+    # 3 components once, outside the scan (C=3 batched)
+    f0X = at_fwd(f)
 
     def step(u, _):
-        nxt = jnp.stack([comp_step(u[i], -v[i]) for i in range(3)])
+        u0X = at_fwd(u)  # C=3 batched
+        nxt = u0X + 0.5 * dt * (f0X + f)
         return nxt, None
 
     u1, _ = jax.lax.scan(step, u0, None, length=plan.n_t)

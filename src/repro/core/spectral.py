@@ -101,6 +101,18 @@ class SpectralOps:
             return out.reshape(lead + out.shape[-3:])
         return self.fft.inv(spec)
 
+    def _fwd_real(self, u: jnp.ndarray) -> jnp.ndarray:
+        """Forward transform of REAL fields; pairs of a batched stack ride
+        the backend's packed forward (``PencilFFT.fwd_packed``) when
+        available — the forward-side mirror of ``_inv_real``, halving the
+        forward all-to-all bytes of gradient/Leray/fused-elliptic stacks."""
+        if getattr(self.fft, "packed", False) and u.ndim > 3:
+            lead = u.shape[:-3]
+            flat = u.reshape((-1,) + u.shape[-3:])
+            out = self.fft.fwd_packed(flat)
+            return out.reshape(lead + out.shape[-3:])
+        return self.fft.fwd(u)
+
     # ------------------------------------------------------------------ #
     # first-order operators (Nyquist-zeroed wavenumbers, skew-adjoint)
     # ------------------------------------------------------------------ #
@@ -110,13 +122,13 @@ class SpectralOps:
         One forward FFT, three diagonal scalings, a *batched* inverse FFT —
         the paper's §III-C1 optimization to avoid three full 3-D round trips.
         """
-        spec = self.fft.fwd(f)
+        spec = self._fwd_real(f)
         stacked = jnp.stack([1j * k * spec for k in self.fft.kd], axis=0)
         return self._inv_real(stacked)
 
     def div(self, v: jnp.ndarray) -> jnp.ndarray:
         """div v: (3, N1,N2,N3) -> (N1,N2,N3)."""
-        spec = self.fft.fwd(v)  # batched over the component axis
+        spec = self._fwd_real(v)  # batched over the component axis
         out = sum(1j * k * spec[i] for i, k in enumerate(self.fft.kd))
         return self.fft.inv(out)
 
@@ -124,20 +136,20 @@ class SpectralOps:
     # even-order elliptic operators (full wavenumbers)
     # ------------------------------------------------------------------ #
     def laplacian(self, f: jnp.ndarray) -> jnp.ndarray:
-        return self.fft.inv(-self.fft.ksq * self.fft.fwd(f))
+        return self.fft.inv(-self.fft.ksq * self._fwd_real(f))
 
     def biharmonic(self, f: jnp.ndarray) -> jnp.ndarray:
-        return self.fft.inv(self.fft.ksq**2 * self.fft.fwd(f))
+        return self.fft.inv(self.fft.ksq**2 * self._fwd_real(f))
 
     def inv_laplacian(self, f: jnp.ndarray) -> jnp.ndarray:
         """Lap^{-1} with the zero mean mode mapped to zero."""
         scale = jnp.where(self.fft.ksq > 0, -1.0 / jnp.maximum(self.fft.ksq, 1e-30), 0.0)
-        return self.fft.inv(scale * self.fft.fwd(f))
+        return self.fft.inv(scale * self._fwd_real(f))
 
     def inv_biharmonic(self, f: jnp.ndarray, zero_mode: float = 0.0) -> jnp.ndarray:
         ksq = self.fft.ksq
         scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq**2, 1e-30), zero_mode)
-        return self.fft.inv(scale * self.fft.fwd(f))
+        return self.fft.inv(scale * self._fwd_real(f))
 
     # ------------------------------------------------------------------ #
     # Leray projection: P = I - grad Lap^{-1} div  (paper eq. (4))
@@ -151,7 +163,7 @@ class SpectralOps:
         in the discrete spectral sense.  The k=0 (mean-velocity) mode is
         untouched: a constant field is divergence free.
         """
-        spec = self.fft.fwd(v)  # (3, ...)
+        spec = self._fwd_real(v)  # (3, ...)
         kd = self.fft.kd
         ksq = self.fft.ksq_d
         kdotv = sum(k * spec[i] for i, k in enumerate(kd))
@@ -164,7 +176,7 @@ class SpectralOps:
     # ------------------------------------------------------------------ #
     def reg_apply(self, v: jnp.ndarray, beta) -> jnp.ndarray:
         """beta * Lap^2 v  (H^2 seminorm regularization, paper eq. (2a))."""
-        return self.fft.inv(beta * self.fft.ksq**2 * self.fft.fwd(v))
+        return self.fft.inv(beta * self.fft.ksq**2 * self._fwd_real(v))
 
     def precond_apply(self, r: jnp.ndarray, beta) -> jnp.ndarray:
         """(beta Lap^2)^{-1} r — the paper's spectral preconditioner.
@@ -174,7 +186,7 @@ class SpectralOps:
         """
         ksq = self.fft.ksq
         scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(beta * ksq**2, 1e-30), 1.0)
-        return self.fft.inv(scale * self.fft.fwd(r))
+        return self.fft.inv(scale * self._fwd_real(r))
 
     # ------------------------------------------------------------------ #
     # fused elliptic ops (beyond-paper; EXPERIMENTS §Perf)
@@ -198,7 +210,7 @@ class SpectralOps:
     def reg_plus_project(self, a: jnp.ndarray, b: jnp.ndarray, beta, incompressible: bool):
         """beta Lap^2 a + P b  (P = I when not incompressible) — one batched
         forward over the 6 stacked components, one batched inverse over 3."""
-        spec = self.fft.fwd(jnp.stack([a, b], axis=0))  # (2, 3, k...)
+        spec = self._fwd_real(jnp.stack([a, b], axis=0))  # (2, 3, k...)
         sa, sb = spec[0], spec[1]
         if incompressible:
             sb = self._leray_spec(sb)
@@ -208,7 +220,7 @@ class SpectralOps:
         """P (beta Lap^2)^{-1} r in a single spectral round trip."""
         ksq = self.fft.ksq
         scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(beta * ksq**2, 1e-30), 1.0)
-        spec = scale * self.fft.fwd(r)
+        spec = scale * self._fwd_real(r)
         if incompressible:
             spec = self._leray_spec(spec)
         return self._inv_real(spec)
@@ -224,14 +236,14 @@ class SpectralOps:
             sigma = (sigma, sigma, sigma)
         k1, k2, k3 = self.fft.k
         expo = -0.5 * ((k1 * sigma[0]) ** 2 + (k2 * sigma[1]) ** 2 + (k3 * sigma[2]) ** 2)
-        return self.fft.inv(jnp.exp(expo) * self.fft.fwd(f))
+        return self.fft.inv(jnp.exp(expo) * self._fwd_real(f))
 
     # ------------------------------------------------------------------ #
     # diagnostics
     # ------------------------------------------------------------------ #
     def reg_energy(self, v: jnp.ndarray, beta) -> jnp.ndarray:
         """beta/2 ||Lap v||^2 via real-space quadrature (mesh independent)."""
-        lap_v = self.fft.inv(-self.fft.ksq * self.fft.fwd(v))
+        lap_v = self.fft.inv(-self.fft.ksq * self._fwd_real(v))
         return 0.5 * beta * self.grid.norm_sq(lap_v)
 
     def jacobian_det(self, disp: jnp.ndarray) -> jnp.ndarray:

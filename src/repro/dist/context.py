@@ -8,7 +8,10 @@ Everything the solver needs to run distributed is derived from a
                       axes=(("pod", "data"), "model"), halo=8)
 
     ops    = ctx.ops      # SpectralOps over the PencilFFT backend
-    interp = ctx.interp   # halo-exchange tricubic, plugs into semilag
+    interp = ctx.interp   # halo-exchange tricubic, plugs into semilag:
+                          #   batched (C,N1,N2,N3) fields ride one ghost
+                          #   exchange; make_plan/apply_plan cache the
+                          #   interpolation weights per Newton iteration
     v      = ctx.shard_vector(v); rho = ctx.shard_scalar(rho)
 
 ``axes`` names the two pencil dimensions; tuple entries fold several mesh

@@ -18,6 +18,18 @@ ring-style and the overhang is trimmed.  The unsharded third axis wraps
 locally.  After the exchange, interpolation is embarrassingly local and
 reuses the ``kernels/ref.py`` oracle arithmetic verbatim, so the
 distributed path is bit-comparable to the single-device one.
+
+Batched multi-field contract: the interp built here accepts ``fields``
+with leading channel dims (C, N1, N2, N3).  The whole C-stack rides ONE
+ghost-exchange sequence per call — the per-direction ``ppermute`` count is
+independent of C, a C x cut in collective-latency count versus C looped
+scalar calls (pinned by ``tests/test_dist_interp.py``, measured by
+``benchmarks`` suite ``interp``).  It also implements the plan protocol of
+``core.semilag``: ``make_plan(disp)`` precomputes the per-point stencil
+operators (elementwise in ``disp`` — sharding-preserving, no collectives)
+and ``apply_plan(fields, plan)`` interpolates against the cached weights,
+so every transport of a Newton iteration skips the per-call weight
+construction.
 """
 from __future__ import annotations
 
@@ -31,7 +43,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.grid import Grid
 from repro.kernels import ref
-from repro.kernels.tricubic import tricubic_displace_pallas_padded
+from repro.kernels.tricubic import (
+    tricubic_apply_pallas_padded,
+    tricubic_displace_pallas_padded_many,
+)
 from repro.launch.mesh import mesh_axes_size
 
 
@@ -59,7 +74,11 @@ def _neighbor_blocks(x: jnp.ndarray, name, p: int, hops: int, from_left: bool):
 
 
 def _exchange_axis(x: jnp.ndarray, name, p: int, lo: int, hi: int, axis: int):
-    """Extend ``x`` by ``lo``/``hi`` ghost cells along a sharded local axis."""
+    """Extend ``x`` by ``lo``/``hi`` ghost cells along a sharded local axis.
+
+    Leading (channel) dims of ``x`` ride along: the ppermute count per
+    direction depends only on the ghost width, never on the stack size.
+    """
     n = x.shape[axis]
     if p == 1:
         return _wrap_pad(x, lo, hi, axis)
@@ -82,8 +101,19 @@ def _exchange_axis(x: jnp.ndarray, name, p: int, lo: int, hi: int, axis: int):
     )
 
 
-def _interp_local(f, d, *, a1, a2, p1, p2, lo, hi, kernel="ref"):
-    """Per-device: exchange ghosts, then tricubic in local coordinates.
+def _exchange_ghosts(f: jnp.ndarray, *, a1, a2, p1, p2, lo, hi) -> jnp.ndarray:
+    """One full ghost exchange of a local block (..., n1l, n2l, n3)."""
+    nd = f.ndim
+    fp = _exchange_axis(f, a1, p1, lo, hi, axis=nd - 3)
+    fp = _exchange_axis(fp, a2, p2, lo, hi, axis=nd - 2)
+    return _wrap_pad(fp, lo, hi, axis=nd - 1)
+
+
+def _interp_local_many(f, d, *, a1, a2, p1, p2, lo, hi, kernel="ref"):
+    """Batched per-device body: ``f`` (C, n1l, n2l, n3) rides ONE exchange.
+
+    Scalar fields go through here too (C=1, reshaped by the dispatcher) —
+    one exchange/dispatch/fallback implementation for every arity.
 
     ``kernel="pallas"`` dispatches the per-shard interpolation to the
     VMEM-blocked Pallas kernel (``kernels/tricubic.py``): the ghost-extended
@@ -92,31 +122,33 @@ def _interp_local(f, d, *, a1, a2, p1, p2, lo, hi, kernel="ref"):
     Falls back to the ``kernels/ref.py`` gather when the shard shape has no
     valid tile or the kernel would run interpreted off-TPU.
     """
-    fp = _exchange_axis(f, a1, p1, lo, hi, axis=0)
-    fp = _exchange_axis(fp, a2, p2, lo, hi, axis=1)
-    fp = _wrap_pad(fp, lo, hi, axis=2)
-
-    n1l, n2l, n3 = f.shape
+    fp = _exchange_ghosts(f, a1=a1, a2=a2, p1=p1, p2=p2, lo=lo, hi=hi)
+    shape3 = f.shape[1:]
     if kernel in ("pallas", "pallas_interpret"):
         from repro.kernels.ops import _pick_tile
 
-        tile = _pick_tile((n1l, n2l, n3))
+        tile = _pick_tile(shape3)
         if tile is not None:
-            return tricubic_displace_pallas_padded(
+            return tricubic_displace_pallas_padded_many(
                 fp, d, tile=tile, halo=lo - 1, interpret=(kernel == "pallas_interpret")
             )
-    ct = jnp.promote_types(d.dtype, jnp.float32)
-    base = jnp.stack(
-        jnp.meshgrid(
-            jnp.arange(n1l, dtype=ct),
-            jnp.arange(n2l, dtype=ct),
-            jnp.arange(n3, dtype=ct),
-            indexing="ij",
-        ),
-        axis=0,
-    )
-    coords = base + jnp.float32(lo) + d.astype(ct)  # ghost origin sits at -lo
-    return ref.tricubic_points(fp, coords)
+    return ref.interp_apply_padded(fp, ref.make_interp_plan(d), lo)
+
+
+def _apply_local_many(f, ib, w, *, a1, a2, p1, p2, lo, hi, kernel="ref"):
+    """Planned batched body: precomputed local operators, one exchange."""
+    fp = _exchange_ghosts(f, a1=a1, a2=a2, p1=p1, p2=p2, lo=lo, hi=hi)
+    shape3 = f.shape[1:]
+    if kernel in ("pallas", "pallas_interpret"):
+        from repro.kernels.ops import _pick_tile
+
+        tile = _pick_tile(shape3)
+        if tile is not None:
+            return tricubic_apply_pallas_padded(
+                fp, ib, w, tile=tile, halo=lo - 1, interpret=(kernel == "pallas_interpret")
+            )
+    need = jnp.zeros((), jnp.float32)  # bound enforced by the checked wrapper
+    return ref.interp_apply_padded(fp, ref.InterpPlan(ib=ib, w=w, halo_need=need), lo)
 
 
 def _resolve_method(method: str) -> str:
@@ -134,30 +166,48 @@ def _resolve_method(method: str) -> str:
 
 def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4,
                      method: str = "auto"):
-    """Build the distributed ``interp(field, disp)`` callable.
+    """Build the distributed ``interp`` callable (batched + plan protocol).
 
     Plugs into every ``interp=`` slot of ``repro.core.semilag`` /
-    ``repro.core.planner``: ``field`` is a ``(N1, N2, N3)`` scalar sharded
-    ``P(a1, a2, None)``, ``disp`` a ``(3, N1, N2, N3)`` grid-unit
+    ``repro.core.planner``: ``fields`` is ``(..., N1, N2, N3)`` sharded
+    ``P(a1, a2, None)`` over the trailing space axes (leading channel dims
+    replicated as a stack), ``disp`` a ``(3, N1, N2, N3)`` grid-unit
     displacement sharded ``P(None, a1, a2, None)`` with ``|disp| < halo``.
     ``method`` picks the per-shard kernel (see ``_resolve_method``).
+
+    The returned callable carries ``make_plan`` / ``apply_plan`` so the
+    solver's plan-once/apply-many path works on the mesh: plan construction
+    is elementwise (stays sharded, no collectives) and the planned apply
+    runs the same single ghost-exchange sequence per call.
     """
     a1, a2 = tuple(axes)
     p1, p2 = mesh_axes_size(mesh, a1), mesh_axes_size(mesh, a2)
     n1, n2, _ = grid.shape
     if n1 % p1 or n2 % p2:
         raise ValueError(f"grid {grid.shape} not divisible by pencil mesh ({p1},{p2})")
-    body = partial(
-        _interp_local, a1=a1, a2=a2, p1=p1, p2=p2, lo=halo + 1, hi=halo + 2,
-        kernel=_resolve_method(method),
-    )
-    return shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(a1, a2, None), P(None, a1, a2, None)),
-        out_specs=P(a1, a2, None),
-        check_rep=False,
-    )
+    kw = dict(a1=a1, a2=a2, p1=p1, p2=p2, lo=halo + 1, hi=halo + 2,
+              kernel=_resolve_method(method))
+    smkw = dict(mesh=mesh, check_rep=False)
+    s_stack = P(None, a1, a2, None)
+    s_w = P(None, None, a1, a2, None)
+    sm4 = shard_map(partial(_interp_local_many, **kw), in_specs=(s_stack, s_stack),
+                    out_specs=s_stack, **smkw)
+    sm_apply = shard_map(partial(_apply_local_many, **kw), in_specs=(s_stack, s_stack, s_w),
+                         out_specs=s_stack, **smkw)
+
+    def interp(field, disp):
+        lead = field.shape[:-3]
+        out = sm4(field.reshape((-1,) + field.shape[-3:]), disp)
+        return out.reshape(lead + out.shape[-3:])
+
+    def apply_plan(fields, plan: ref.InterpPlan):
+        lead = fields.shape[:-3]
+        out = sm_apply(fields.reshape((-1,) + fields.shape[-3:]), plan.ib, plan.w)
+        return out.reshape(lead + out.shape[-3:])
+
+    interp.make_plan = ref.make_interp_plan
+    interp.apply_plan = apply_plan
+    return interp
 
 
 # --------------------------------------------------------------------------- #
@@ -177,16 +227,21 @@ def make_checked_interp(halo_interp, mesh, axes, halo: int, on_overflow: str = "
       * "gather" — correct-but-slow fallback: a ``lax.cond`` switches to the
         global ``kernels/ref.py`` gather (XLA all-gathers the field), so the
         iteration stays exact at the cost of one global collective.
+
+    On the planned path the bound comes for free off the cached
+    ``InterpPlan.halo_need`` (one max-reduction per Newton iteration, paid
+    at plan-build time, instead of one per interp call).
     """
     from repro.kernels.ops import max_displacement
 
     a1, a2 = tuple(axes)
-    out_sharding = NamedSharding(mesh, P(a1, a2, None))
     budget = jnp.float32(halo)
 
-    def checked(field, disp):
-        need = jnp.ceil(max_displacement(disp))
-        ok = need <= budget
+    def out_sharding(ndim):
+        lead = (None,) * (ndim - 3)
+        return NamedSharding(mesh, P(*lead, a1, a2, None))
+
+    def warn_if(ok, need):
         lax.cond(
             ok,
             lambda n: None,
@@ -196,12 +251,17 @@ def make_checked_interp(halo_interp, mesh, axes, halo: int, on_overflow: str = "
             ),
             need,
         )
+
+    def checked(field, disp):
+        need = jnp.ceil(max_displacement(disp))
+        ok = need <= budget
+        warn_if(ok, need)
         if on_overflow == "gather":
             return lax.cond(
                 ok,
                 halo_interp,
                 lambda f, d: lax.with_sharding_constraint(
-                    ref.tricubic_displace(f, d), out_sharding
+                    ref.tricubic_displace_many(f, d), out_sharding(field.ndim)
                 ),
                 field,
                 disp,
@@ -209,4 +269,24 @@ def make_checked_interp(halo_interp, mesh, axes, halo: int, on_overflow: str = "
         out = halo_interp(field, disp)
         return out + jnp.where(ok, 0.0, jnp.nan).astype(out.dtype)
 
+    def checked_apply(fields, plan: ref.InterpPlan):
+        ok = plan.halo_need <= budget
+        warn_if(ok, plan.halo_need)
+        if on_overflow == "gather":
+            # ref.interp_apply wraps by global index arithmetic — exact for
+            # any displacement, so it is the planned gather fallback
+            return lax.cond(
+                ok,
+                halo_interp.apply_plan,
+                lambda f, p: lax.with_sharding_constraint(
+                    ref.interp_apply(f, p), out_sharding(fields.ndim)
+                ),
+                fields,
+                plan,
+            )
+        out = halo_interp.apply_plan(fields, plan)
+        return out + jnp.where(ok, 0.0, jnp.nan).astype(out.dtype)
+
+    checked.make_plan = halo_interp.make_plan
+    checked.apply_plan = checked_apply
     return checked

@@ -19,13 +19,22 @@ All three passes are complex-to-complex.  A c2c transform (instead of the
 single-device ``rfftn``) keeps every transposed axis length divisible by
 the pencil sizes for any valid mesh (an r2c last axis of ``N3/2 + 1``
 modes is generally not), at the cost of 2x redundant spectrum storage.
-The inverse-side bandwidth is won back with the classic packing trick
-(``inv_packed``): two real-destined spectra ``Fa, Fb`` ride one inverse
-transform as ``Fa + i Fb``, since ``ifft`` is linear and ``a, b`` real
-means ``a = Re ifft``, ``b = Im ifft``.  ``SpectralOps._inv_real`` probes
-for this via the ``packed`` attribute and routes every batched
-real-destined inverse (gradients, Leray, fused elliptic ops) through it —
-halving inverse all-to-all bytes.
+The bandwidth is won back with the classic packing trick on BOTH sides:
+
+* ``inv_packed``: two real-destined spectra ``Fa, Fb`` ride one inverse
+  transform as ``Fa + i Fb``, since ``ifft`` is linear and ``a, b`` real
+  means ``a = Re ifft``, ``b = Im ifft``.
+* ``fwd_packed``: two *real* fields ride one forward transform as
+  ``a + i b``; Hermitian symmetry of real spectra unpacks them via
+  ``Fa = (Z + conj(Z(-k)))/2``, ``Fb = -i (Z - conj(Z(-k)))/2``.  The
+  frequency reversal ``Z(-k)`` is a flip+roll of the sharded spectrum,
+  which GSPMD lowers to shard-reversing collective-permutes — far cheaper
+  than the all-to-all transposes the second transform would have cost.
+
+``SpectralOps`` probes for these via the ``packed`` attribute and routes
+every batched real(-destined) transform (gradients of time series, Leray,
+``div``, the fused elliptic ops) through them — halving the pencil
+all-to-all bytes on each routed side.
 
 Mesh axis entries may be tuples (e.g. ``(("pod", "data"), "model")``) so a
 multi-pod mesh can fold two device axes into one pencil dimension.
@@ -117,6 +126,38 @@ class PencilFFT:
 
     def inv(self, spec: jnp.ndarray) -> jnp.ndarray:
         return self._batched(self._inv4, spec).real.astype(self.grid.dtype)
+
+    def _reverse_k(self, spec: jnp.ndarray) -> jnp.ndarray:
+        """``Z(k) -> Z((N - k) mod N)`` per space axis of a k-space array.
+
+        ``(N - k) mod N`` is a full flip followed by a roll of 1.  Applied at
+        the jnp level on the sharded spectrum: the flip/roll of the two
+        sharded k axes lower to shard-reversing collective-permutes under
+        GSPMD (no all-to-all re-pencilling).
+        """
+        ax = (-3, -2, -1)
+        return jnp.roll(jnp.flip(spec, axis=ax), shift=(1, 1, 1), axis=ax)
+
+    def fwd_packed(self, u: jnp.ndarray) -> jnp.ndarray:
+        """Forward transform of ``(B, N1, N2, N3)`` REAL fields, two per ride.
+
+        Pairs ``(u_{2i}, u_{2i+1})`` into ``u_{2i} + i u_{2i+1}``, transforms
+        ``ceil(B/2)`` complex fields, and unpacks the two Hermitian spectra —
+        halving the forward-side transpose traffic (the ROADMAP "packed
+        forward transform" item, mirror of ``inv_packed``).
+        """
+        b = u.shape[0]
+        h = b // 2
+        if h == 0:
+            return self.fwd(u)
+        z = self._fwd4(u[0 : 2 * h : 2] + 1j * u[1 : 2 * h : 2])  # (h, k...)
+        zr = jnp.conj(self._reverse_k(z))  # conj Z(-k)
+        fa = 0.5 * (z + zr)
+        fb = -0.5j * (z - zr)
+        out = jnp.stack([fa, fb], axis=1).reshape((2 * h,) + z.shape[1:])
+        if b % 2:
+            out = jnp.concatenate([out, self._fwd4(u[2 * h :].astype(z.dtype))], axis=0)
+        return out
 
     def inv_packed(self, spec: jnp.ndarray) -> jnp.ndarray:
         """Inverse of ``(B, N1, N2, N3)`` real-destined spectra, two per ride.

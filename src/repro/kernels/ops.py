@@ -5,6 +5,19 @@ displacement bound fits the halo budget, and the pure-jnp oracle elsewhere
 (CPU/GPU, or when the planner reports an unbounded displacement).  On this
 CPU container the Pallas path runs in interpret mode (correctness only) —
 the solver keeps the oracle path hot so wall-clock tests stay fast.
+
+The first-class entry is ``make_interp``: an ``Interp`` executor implements
+the solver-wide interpolation protocol —
+
+    interp(field, disp)          field (..., N1,N2,N3), leading dims batched
+    interp.make_plan(disp)       -> InterpPlan (precomputed operators)
+    interp.apply_plan(fields, plan)
+
+``core.planner.make_plan`` builds one ``InterpPlan`` per departure field
+through ``make_plan`` and ``core.semilag`` binds ``apply_plan`` so every
+transport solve and PCG Hessian matvec of a Newton iteration reuses the
+cached weights.  ``repro.dist.halo`` implements the same protocol on the
+pencil mesh.
 """
 from __future__ import annotations
 
@@ -14,7 +27,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.tricubic import tricubic_displace_pallas
+from repro.kernels.tricubic import (
+    tricubic_apply_pallas,
+    tricubic_displace_pallas,
+    tricubic_displace_pallas_many,
+)
 
 
 def _pick_tile(shape: tuple[int, int, int]) -> tuple[int, int, int] | None:
@@ -32,6 +49,19 @@ def _pick_tile(shape: tuple[int, int, int]) -> tuple[int, int, int] | None:
     return (t1, t2, t3)
 
 
+def _resolve(method: str, shape3, tile):
+    """Single dispatch policy: "auto" -> the Pallas kernel on TPU, the jnp
+    oracle elsewhere; Pallas additionally needs a valid tile for the shape
+    (falls back to "ref" otherwise).  Returns (method, tile)."""
+    if method == "auto":
+        method = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if method == "pallas":
+        tile = tile or _pick_tile(tuple(shape3))
+        if tile is None:
+            method = "ref"
+    return method, tile
+
+
 def tricubic_displace(
     field: jnp.ndarray,
     disp: jnp.ndarray,
@@ -41,12 +71,8 @@ def tricubic_displace(
     tile: tuple[int, int, int] | None = None,
 ) -> jnp.ndarray:
     """field (N1,N2,N3) sampled at x + disp; disp (3,N1,N2,N3), grid units."""
-    if method == "auto":
-        method = "pallas" if jax.default_backend() == "tpu" else "ref"
+    method, tile = _resolve(method, field.shape, tile)
     if method == "ref":
-        return ref.tricubic_displace(field, disp)
-    tile = tile or _pick_tile(field.shape)
-    if tile is None:
         return ref.tricubic_displace(field, disp)
     interpret = jax.default_backend() != "tpu"
     return tricubic_displace_pallas(field, disp, tile=tile, halo=halo, interpret=interpret)
@@ -55,6 +81,76 @@ def tricubic_displace(
 def tricubic_displace_vec(field: jnp.ndarray, disp: jnp.ndarray, **kw) -> jnp.ndarray:
     """Vector/stacked fields: (C, N1,N2,N3)."""
     return jax.vmap(lambda f: tricubic_displace(f, disp, **kw))(field)
+
+
+def tricubic_displace_many(
+    fields: jnp.ndarray,
+    disp: jnp.ndarray,
+    *,
+    method: str = "auto",
+    halo: int = 4,
+    tile: tuple[int, int, int] | None = None,
+) -> jnp.ndarray:
+    """Batched multi-field entry: ``fields`` (..., N1,N2,N3), leading dims
+    are channels sharing one weight construction / one kernel launch."""
+    shape3 = fields.shape[-3:]
+    lead = fields.shape[:-3]
+    method, tile = _resolve(method, shape3, tile)
+    if method == "ref":
+        return ref.tricubic_displace_many(fields, disp)
+    interpret = jax.default_backend() != "tpu"
+    out = tricubic_displace_pallas_many(
+        fields.reshape((-1,) + shape3), disp, tile=tile, halo=halo, interpret=interpret
+    )
+    return out.reshape(lead + shape3)
+
+
+class Interp:
+    """Plan-aware single-device interpolation executor (see module docstring).
+
+    ``method``/``halo``/``tile`` follow ``tricubic_displace``; the Pallas
+    budget ``halo`` also caps plan displacements on that path (checked by
+    the caller via ``core.planner.required_halo``).
+    """
+
+    def __init__(self, method: str = "auto", halo: int = 4, tile=None):
+        self.method = method
+        self.halo = halo
+        self.tile = tile
+
+    def _resolved(self, shape3):
+        return _resolve(self.method, shape3, self.tile)
+
+    def __call__(self, field: jnp.ndarray, disp: jnp.ndarray) -> jnp.ndarray:
+        if field.ndim == 3:
+            return tricubic_displace(
+                field, disp, method=self.method, halo=self.halo, tile=self.tile
+            )
+        return tricubic_displace_many(
+            field, disp, method=self.method, halo=self.halo, tile=self.tile
+        )
+
+    def make_plan(self, disp: jnp.ndarray) -> ref.InterpPlan:
+        return ref.make_interp_plan(disp)
+
+    def apply_plan(self, fields: jnp.ndarray, plan: ref.InterpPlan) -> jnp.ndarray:
+        shape3 = fields.shape[-3:]
+        method, tile = self._resolved(shape3)
+        if method == "ref":
+            return ref.interp_apply(fields, plan)
+        lead = fields.shape[:-3]
+        interpret = jax.default_backend() != "tpu"
+        out = tricubic_apply_pallas(
+            fields.reshape((-1,) + shape3), plan,
+            tile=tile, halo=self.halo, interpret=interpret,
+        )
+        return out.reshape(lead + shape3)
+
+
+def make_interp(method: str = "auto", halo: int = 4, tile=None) -> Interp:
+    """Factory for the solver's ``interp=`` slots (kept for API symmetry
+    with ``repro.dist.halo.make_halo_interp``)."""
+    return Interp(method=method, halo=halo, tile=tile)
 
 
 def tricubic_points(field: jnp.ndarray, coords: jnp.ndarray, chunk: int | None = None) -> jnp.ndarray:

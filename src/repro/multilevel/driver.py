@@ -12,7 +12,11 @@ the Newton progress already bought at 8-64x cheaper matvecs.
 Runs single-device (``SpectralOps`` per level) or on the production mesh:
 pass the fine ``DistContext`` and every coarse level derives its own
 context on the same mesh (``ctx.coarsen``), with the spectral transfer
-re-sharding through the pencil FFTs.
+re-sharding through the pencil FFTs.  Either way each level's solver gets
+a plan-aware interp (``kernels.ops.Interp`` locally, the halo-exchange
+interp of the level's context on a mesh), so the per-iteration
+``InterpPlan`` weight cache and the batched multi-field transport calls
+of ``core.semilag`` are active at every level of the ladder.
 """
 from __future__ import annotations
 

@@ -1,0 +1,201 @@
+"""Plan-once / apply-many interpolation: InterpPlan + batched multi-field
+contract (ISSUE 3 tentpole).
+
+Covers, single-device: batched-vs-looped equivalence on the ref oracle and
+the Pallas kernel (interpret mode), planned-vs-unplanned equivalence on
+both, the ``kernels.ops.Interp`` executor protocol, plan construction and
+reuse inside ``SLPlan``, and plan reuse across GN Hessian (PCG) matvecs.
+The 8-device mesh counterparts live in ``tests/test_dist_interp.py``.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objective as obj
+from repro.core import semilag
+from repro.core.grid import make_grid
+from repro.core.planner import make_plan, required_halo
+from repro.core.spectral import SpectralOps
+from repro.data import synthetic
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.tricubic import tricubic_apply_pallas, tricubic_displace_pallas_many
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _problem(rng, shape=(8, 12, 16), c=4, lim=3.0):
+    f = jnp.asarray(rng.standard_normal((c,) + shape), jnp.float32)
+    d = jnp.asarray(rng.uniform(-lim, lim, (3,) + shape), jnp.float32)
+    return f, d
+
+
+def _looped(f, d):
+    return jnp.stack([ref.tricubic_displace(f[i], d) for i in range(f.shape[0])])
+
+
+# ----------------------------------------------------------------------- #
+# ref oracle
+# ----------------------------------------------------------------------- #
+def test_batched_matches_looped_ref(rng):
+    f, d = _problem(rng)
+    np.testing.assert_allclose(
+        ref.tricubic_displace_many(f, d), _looped(f, d), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_planned_matches_unplanned_ref(rng):
+    f, d = _problem(rng)
+    plan = ref.make_interp_plan(d)
+    np.testing.assert_allclose(
+        ref.interp_apply(f, plan), _looped(f, d), atol=1e-4, rtol=1e-4
+    )
+    # rank-3 (no channel axis) goes through the same plan
+    np.testing.assert_allclose(
+        ref.interp_apply(f[0], plan), _looped(f, d)[0], atol=1e-4, rtol=1e-4
+    )
+
+
+def test_plan_halo_need_matches_required_halo(rng):
+    _, d = _problem(rng, lim=2.7)
+    plan = ref.make_interp_plan(d)
+    assert float(plan.halo_need) == float(jnp.ceil(jnp.max(jnp.abs(d))))
+
+
+def test_plan_apply_padded_matches_global(rng):
+    f, d = _problem(rng)
+    lo, hi = 5, 6
+    fp = jnp.pad(f, ((0, 0), (lo, hi), (lo, hi), (lo, hi)), mode="wrap")
+    plan = ref.make_interp_plan(d)
+    np.testing.assert_allclose(
+        ref.interp_apply_padded(fp, plan, lo), ref.interp_apply(f, plan), atol=1e-5
+    )
+
+
+def test_plan_exact_at_grid_points(rng):
+    f = jnp.asarray(rng.standard_normal((2, 8, 8, 8)), jnp.float32)
+    plan = ref.make_interp_plan(jnp.zeros((3, 8, 8, 8)))
+    np.testing.assert_array_equal(ref.interp_apply(f, plan), f)
+
+
+# ----------------------------------------------------------------------- #
+# Pallas kernel (interpret mode on CPU)
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("c", [1, 3])
+def test_pallas_batched_matches_ref(rng, c):
+    shape, tile, halo = (16, 16, 32), (8, 8, 16), 4
+    f, d = _problem(rng, shape, c=c, lim=halo - 0.1)
+    out = tricubic_displace_pallas_many(f, d, tile=tile, halo=halo, interpret=True)
+    np.testing.assert_allclose(out, _looped(f, d), atol=1e-4, rtol=1e-4)
+
+
+def test_pallas_planned_matches_ref(rng):
+    shape, tile, halo = (16, 16, 32), (8, 8, 16), 4
+    f, d = _problem(rng, shape, c=3, lim=halo - 0.1)
+    plan = ref.make_interp_plan(d)
+    out = tricubic_apply_pallas(f, plan, tile=tile, halo=halo, interpret=True)
+    np.testing.assert_allclose(out, _looped(f, d), atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------------------- #
+# ops.Interp executor protocol
+# ----------------------------------------------------------------------- #
+@pytest.mark.parametrize("method", ["ref", "pallas"])
+def test_interp_executor_protocol(rng, method):
+    shape = (16, 16, 32)
+    interp = kops.make_interp(method=method)
+    f, d = _problem(rng, shape, c=3, lim=3.9)
+    expect = _looped(f, d)
+    np.testing.assert_allclose(interp(f, d), expect, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(interp(f[0], d), expect[0], atol=1e-4, rtol=1e-4)
+    plan = interp.make_plan(d)
+    np.testing.assert_allclose(interp.apply_plan(f, plan), expect, atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------------------- #
+# SLPlan integration: plans built once, reused everywhere
+# ----------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def gn_setup():
+    g = make_grid(16)
+    ops = SpectralOps(g)
+    rho_R, rho_T, v_star, _ = synthetic.synthetic_problem(16)
+    prob = obj.Problem(g, rho_R, rho_T, 1e-2, 4, False)
+    return g, ops, prob, 0.4 * v_star
+
+
+def test_make_plan_builds_interp_plans(gn_setup):
+    g, ops, prob, v = gn_setup
+    plan = make_plan(v, g, ops, 4, incompressible=False)
+    assert plan.iplan_fwd is not None and plan.iplan_adj is not None
+    assert plan.iplan_fwd.ib.shape == (3,) + g.shape
+    assert plan.iplan_fwd.w.shape == (3, 4) + g.shape
+    # cached bound == the planner's recomputed bound
+    bare = plan._replace(iplan_fwd=None, iplan_adj=None)
+    assert float(required_halo(plan)) == float(required_halo(bare))
+
+
+def test_transports_planned_equal_unplanned(gn_setup):
+    """The planned applier path of semilag._bind is numerically the
+    unplanned per-call path (same operators, cached vs rebuilt)."""
+    g, ops, prob, v = gn_setup
+    plan = make_plan(v, g, ops, 4, incompressible=False)
+    bare = plan._replace(iplan_fwd=None, iplan_adj=None)
+    rho = prob.rho_T
+    np.testing.assert_allclose(
+        semilag.transport_state(rho, plan),
+        semilag.transport_state(rho, bare),
+        atol=1e-4,
+    )
+    np.testing.assert_allclose(
+        semilag.transport_adjoint(rho, plan),
+        semilag.transport_adjoint(rho, bare),
+        atol=1e-4,
+    )
+    np.testing.assert_allclose(
+        semilag.deformation_displacement(v, plan),
+        semilag.deformation_displacement(v, bare),
+        atol=1e-4,
+    )
+
+
+def test_gn_matvec_plan_reuse(gn_setup, rng):
+    """PCG Hessian matvecs through the cached InterpPlan equal the
+    unplanned evaluation — plan reuse across matvecs is exact."""
+    g, ops, prob, v = gn_setup
+    interp = kops.make_interp(method="ref")
+    state = obj.newton_state(v, prob, ops, interp)
+    assert state.plan.iplan_fwd is not None  # threaded through newton_state
+    state_bare = state._replace(plan=state.plan._replace(iplan_fwd=None, iplan_adj=None))
+    for seed in (0, 1):
+        vt = jnp.asarray(
+            np.random.default_rng(seed).standard_normal((3,) + g.shape), jnp.float32
+        )
+        hp = obj.gn_hessian_matvec(vt, state, prob, ops, interp)
+        hb = obj.gn_hessian_matvec(vt, state_bare, prob, ops, interp)
+        np.testing.assert_allclose(hp, hb, atol=1e-4)
+
+
+# ----------------------------------------------------------------------- #
+# committed benchmark record (written by `benchmarks.run --suite interp`)
+# ----------------------------------------------------------------------- #
+def test_bench_interp_record():
+    path = os.path.join(ROOT, "BENCH_interp.json")
+    assert os.path.exists(path), "run: PYTHONPATH=src python -m benchmarks.run --suite interp"
+    rec = json.load(open(path))
+    # (a) batched C-field interp beats C looped calls in wall time at 64^3+
+    rows = [r for r in rec["single_device"] if r["n"] >= 64]
+    assert rows, rec
+    for r in rows:
+        assert r["batched_s"] < r["looped_s"], r
+        assert r["planned_s"] < r["looped_s"], r
+    # (b) counted: one ghost-exchange round per batched mesh call vs C
+    mesh = rec["mesh"]
+    assert mesh["collective_permutes"]["batched_c3"] == mesh["collective_permutes"]["c1"]
+    assert (
+        mesh["collective_permutes"]["looped_c3"]
+        == 3 * mesh["collective_permutes"]["c1"]
+    )
