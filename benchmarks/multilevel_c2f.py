@@ -1,14 +1,30 @@
-"""Coarse-to-fine vs single-level Gauss-Newton: the grid-continuation table.
+"""Coarse-to-fine and multigrid-preconditioner suite: the grid-continuation
+table plus the preconditioner beta sweep.
 
     PYTHONPATH=src python -m benchmarks.run --suite multilevel
 
-Solves the paper's synthetic problem once at fixed (fine) resolution and
-once through the ``repro.multilevel`` ladder, at the same convergence
-tolerance (the warm-started fine level terminates against the cold-start
-fine gradient norm), and emits ``BENCH_multilevel.json``: per-level Hessian
-matvecs, fine-grid-equivalent matvecs (matvecs weighted by level/fine point
-ratio — the paper's Table V cost metric made resolution-aware), and
-wall-clock, next to the single-level baseline column.
+Two measurements, both written (merged) into ``BENCH_multilevel.json``:
+
+* ``measure`` — the paper's synthetic problem solved once at fixed (fine)
+  resolution and once through the ``repro.multilevel`` ladder, at the same
+  convergence tolerance (the warm-started fine level terminates against
+  the cold-start fine gradient norm).  Emits per-level Hessian matvecs,
+  fine-grid-equivalent matvecs (matvecs weighted by level/fine point
+  ratio — the paper's Table V cost metric made resolution-aware), and
+  wall-clock, next to the single-level baseline column.  Feeds
+  EXPERIMENTS.md §Multilevel (table "coarse-to-fine vs single-level").
+* ``precond_sweep`` — the preconditioner A/B at beta in {1e-2, 1e-3,
+  1e-4} on ONE fixed 3-level ladder: the paper's spectral
+  ``(beta Lap^2)^{-1}`` vs the PR-2 two-level scheme vs the recursive
+  Galerkin V-cycle (``repro.multilevel.precond``).  Columns record the
+  outer fine-grid matvecs AND the preconditioner-internal coarse matvecs
+  (``precond_fine_equiv``), so ``total_fine_equiv`` is the honest cost.
+  Feeds EXPERIMENTS.md §Multilevel (table "preconditioner beta sweep",
+  the Table V analogue).
+
+``BENCH_ML_TOY=1`` (used by ``scripts/smoke.sh``) shrinks both to toy
+size and writes ``results/BENCH_multilevel_toy.json`` instead of the
+committed record.
 """
 from __future__ import annotations
 
@@ -21,8 +37,9 @@ from repro.core import gauss_newton as gn
 from repro.data import synthetic
 
 
-DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                           "BENCH_multilevel.json")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_multilevel.json")
+TOY_OUT = os.path.join(ROOT, "results", "BENCH_multilevel_toy.json")
 
 
 def measure(n: int = 24, beta: float = 1e-2, gtol: float = 1e-2, n_levels: int = 2,
@@ -64,14 +81,84 @@ def measure(n: int = 24, beta: float = 1e-2, gtol: float = 1e-2, n_levels: int =
     }
 
 
+# --------------------------------------------------------------------------- #
+# preconditioner beta sweep: spectral vs two-level vs V-cycle
+# --------------------------------------------------------------------------- #
+SCHEMES = ("spectral", "two_level", "vcycle")
+
+
+def precond_cell(rho_R, rho_T, grid, scheme: str, beta: float, *, n_levels: int = 3,
+                 gtol: float = 1e-2, max_newton: int = 6, max_cg: int = 200) -> dict:
+    """One C2F solve on a fixed ladder, varying only the preconditioner."""
+    from repro import multilevel
+    from repro.multilevel.hierarchy import MultilevelConfig
+
+    base = gn.GNConfig(beta=beta, n_t=4, max_newton=max_newton, gtol=gtol, max_cg=max_cg)
+    cfg = MultilevelConfig(
+        solver=base,
+        n_levels=n_levels,
+        precond={"spectral": "none"}.get(scheme, scheme),
+    )
+    t0 = time.time()
+    out = multilevel.solve(rho_R, rho_T, grid, cfg)
+    return {
+        "fine_matvecs": out["fine_matvecs"],
+        "fine_equiv_matvecs": out["fine_equiv_matvecs"],
+        "precond_fine_equiv_matvecs": out["precond_fine_equiv_matvecs"],
+        "total_fine_equiv_matvecs": out["total_fine_equiv_matvecs"],
+        "newton_iters": out["newton_iters"],
+        "rel_gnorm": out["history"][-1]["rel_gnorm"],
+        "levels": out["grids"],
+        "wall_s": time.time() - t0,
+    }
+
+
+def precond_sweep(n: int = 32, betas=(1e-2, 1e-3, 1e-4), n_levels: int = 3,
+                  gtol: float = 1e-2) -> dict:
+    """The Table V analogue: matvec counts vs beta per preconditioner."""
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(n)
+    rows = []
+    for beta in betas:
+        row = {"beta": beta}
+        for scheme in SCHEMES:
+            row[scheme] = precond_cell(rho_R, rho_T, grid, scheme, beta,
+                                       n_levels=n_levels, gtol=gtol)
+        rows.append(row)
+    return {
+        "fine_grid": list(grid.shape),
+        "n_levels": n_levels,
+        "gtol": gtol,
+        "schemes": list(SCHEMES),
+        "rows": rows,
+    }
+
+
 def write_record(rec: dict, out: str = DEFAULT_OUT) -> None:
+    """Merge ``rec``'s top-level keys into the existing record (so the C2F
+    table and the precond sweep can be refreshed independently)."""
+    merged = {}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                merged = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(rec)
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out + ".tmp", "w") as f:
-        json.dump(rec, f, indent=1)
+        json.dump(merged, f, indent=1)
     os.replace(out + ".tmp", out)
 
 
-def main(out: str = DEFAULT_OUT):
-    rec = measure()
+def main(out: str | None = None):
+    toy = bool(os.environ.get("BENCH_ML_TOY"))
+    out = out or (TOY_OUT if toy else DEFAULT_OUT)
+    rec = measure(n=16 if toy else 24)
+    rec["precond_sweep"] = (
+        precond_sweep(n=16, betas=(1e-2, 1e-4), n_levels=2)
+        if toy
+        else precond_sweep()
+    )
     write_record(rec, out)
     s, m = rec["single_level"], rec["multilevel"]
     emit("multilevel/single_level", s["wall_s"] * 1e6,
@@ -81,6 +168,12 @@ def main(out: str = DEFAULT_OUT):
     for lv in m["levels"]:
         emit(f"multilevel/level_{'x'.join(map(str, lv['shape']))}", lv["wall_s"] * 1e6,
              f"matvecs={lv['hessian_matvecs']};fine_equiv={lv['fine_equiv_matvecs']:.1f}")
+    for row in rec["precond_sweep"]["rows"]:
+        for scheme in SCHEMES:
+            c = row[scheme]
+            emit(f"multilevel/precond_{scheme}_beta{row['beta']:.0e}", c["wall_s"] * 1e6,
+                 f"fine_matvecs={c['fine_matvecs']};total_fine_equiv="
+                 f"{c['total_fine_equiv_matvecs']:.1f}")
     print(f"# wrote {out}")
 
 

@@ -26,7 +26,11 @@ def main():
         max_newton=8, gtol=1e-2, max_cg=40,
     )
 
-    cfg = RegistrationConfig(multilevel=MultilevelConfig(solver=solver, n_levels=3))
+    # precond="vcycle": recursive Galerkin multigrid preconditioner at every
+    # warm-started level (see EXPERIMENTS.md §Multilevel for the beta sweep)
+    cfg = RegistrationConfig(
+        multilevel=MultilevelConfig(solver=solver, n_levels=3, precond="vcycle")
+    )
     t0 = time.time()
     out = register(rho_R, rho_T, cfg, grid=grid, verbose=True)
     t_ml = time.time() - t0
@@ -37,7 +41,8 @@ def main():
               f"matvecs={lv['hessian_matvecs']} (fine-equiv {lv['fine_equiv_matvecs']:.1f}) "
               f"{lv['wall_s']:.1f}s")
     print(f"  fine-grid matvecs: {out['fine_matvecs']}  "
-          f"fine-equivalent total: {out['fine_equiv_matvecs']:.1f}")
+          f"fine-equivalent total: {out['fine_equiv_matvecs']:.1f}  "
+          f"(+{out['precond_fine_equiv_matvecs']:.1f} inside the V-cycle)")
 
     t0 = time.time()
     single = register(rho_R, rho_T, RegistrationConfig(solver=solver), grid=grid)

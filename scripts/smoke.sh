@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 smoke: the fast test tier, the interp microbench at toy size
 # (plan/batch/ghost-exchange regressions fail fast: the suite asserts the
-# counted collective-permute structure on every run), plus one tiny
+# counted collective-permute structure on every run), one tiny
 # coarse-to-fine registration end-to-end (restrict -> coarse GN solve ->
-# prolong warm start -> fine GN solve -> diffeomorphism check).  Total
-# budget ~3 min on the CPU container.
+# prolong warm start -> fine GN solve -> diffeomorphism check), and a toy
+# 3-level V-cycle cell (Galerkin multigrid preconditioner vs spectral).
+# Total budget ~6 min on the CPU container.
 #
 #     bash scripts/smoke.sh
 set -euo pipefail
@@ -16,6 +17,11 @@ python -m pytest -x -q -m "not slow"
 # toy-size interp suite: writes results/BENCH_interp_toy.json (gitignored),
 # never the committed BENCH_interp.json record
 BENCH_INTERP_TOY=1 python -m benchmarks.run --suite interp
+
+# toy-size multilevel suite: C2F record + the spectral/two-level/V-cycle
+# precond sweep at 16^3, written to results/BENCH_multilevel_toy.json
+# (gitignored) — exercises the merge-aware record writer every run
+BENCH_ML_TOY=1 python -m benchmarks.run --suite multilevel
 
 python - <<'EOF'
 import jax.numpy as jnp
@@ -37,6 +43,34 @@ print("smoke 2-level registration OK:",
       f"fine matvecs={out['fine_matvecs']}",
       f"fine-equiv={out['fine_equiv_matvecs']:.1f}",
       f"residual_rel={out['residual_rel']:.3f}")
+EOF
+
+# toy 3-level V-cycle cell: the recursive Galerkin preconditioner must beat
+# the spectral preconditioner on fine-grid matvecs in the low-beta regime
+python - <<'EOF'
+import jax.numpy as jnp
+from repro.core import gauss_newton as gn
+from repro.data import synthetic
+from repro import multilevel
+from repro.multilevel.hierarchy import MultilevelConfig
+
+rho_R, rho_T, _, grid = synthetic.synthetic_problem(16)
+base = gn.GNConfig(beta=1e-4, n_t=4, max_newton=6, gtol=1e-2, max_cg=200)
+counts = {}
+for kind in ("none", "vcycle"):
+    cfg = MultilevelConfig(solver=base, n_levels=3, min_size=4, precond=kind,
+                           precond_cg_iters=4, precond_coarse_cg_iters=10,
+                           precond_min_size=4)  # recurse the full toy ladder
+    out = multilevel.solve(rho_R, rho_T, grid, cfg)
+    assert out["history"][-1]["rel_gnorm"] <= 1e-2 + 1e-6, out["history"][-1]
+    counts[kind] = out
+vc, sp = counts["vcycle"], counts["none"]
+assert vc["fine_matvecs"] < sp["fine_matvecs"], (vc["fine_matvecs"], sp["fine_matvecs"])
+assert vc["precond_fine_equiv_matvecs"] > 0.0
+print("smoke 3-level V-cycle OK:",
+      f"fine matvecs {sp['fine_matvecs']} (spectral) -> {vc['fine_matvecs']} (vcycle)",
+      f"total fine-equiv {sp['total_fine_equiv_matvecs']:.1f} -> "
+      f"{vc['total_fine_equiv_matvecs']:.1f}")
 EOF
 
 echo "tier-1 smoke PASSED"

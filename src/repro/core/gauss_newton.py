@@ -39,6 +39,10 @@ class GNConfig:
     max_line_search: int = 10
     beta_continuation: tuple[float, ...] = ()  # e.g. (1e-1, 1e-2): warm starts
     interp_method: str = "ref"  # "ref" | "pallas" | "auto"
+    # e.g. "bfloat16": pack InterpPlan weights.  Local-executor only — an
+    # explicit interp= (the distributed path) carries its own setting via
+    # DistContext(plan_dtype=...) / make_halo_interp(plan_dtype=...).
+    plan_dtype: str | None = None
     fused_elliptic: bool = False  # beyond-paper: fuse beta Lap^2 + Leray (+precond)
     gauss_newton: bool = True  # False: full Newton Hessian (paper eq. (5), all terms)
 
@@ -102,7 +106,7 @@ def _interp_fn(cfg: GNConfig):
     # plan-aware executor: core.planner.make_plan caches an InterpPlan per
     # departure field through it, so every PCG Hessian matvec / line-search
     # transport of an iteration reuses precomputed interpolation weights
-    return kops.make_interp(method=cfg.interp_method)
+    return kops.make_interp(method=cfg.interp_method, plan_dtype=cfg.plan_dtype)
 
 
 def newton_iteration(
@@ -117,12 +121,18 @@ def newton_iteration(
     """One globalized inexact Gauss-Newton step.  Returns (v_new, NewtonLog).
 
     ``precond`` is an optional factory ``(state, prob) -> (r -> z)``
-    replacing the default spectral preconditioner — e.g. the two-level
-    coarse-grid preconditioner built by ``repro.multilevel.precond``.  It is
-    invoked once per Newton iteration with the fresh ``NewtonState`` and the
-    current ``Problem`` (whose ``beta`` tracks the continuation schedule) so
-    it can assemble state-dependent coarse operators inside the same jit
-    program.  The Armijo steepest-descent safeguard always uses the cheap
+    replacing the default spectral preconditioner — e.g. the two-level or
+    V-cycle multigrid preconditioners built by ``repro.multilevel.precond``.
+    It is invoked once per Newton iteration with the fresh ``NewtonState``
+    and the current ``Problem`` (whose ``beta`` tracks the continuation
+    schedule) so it can assemble state-dependent coarse operators inside the
+    same jit program (the V-cycle restricts the state's cached
+    ``grad rho``/departure fields right here — Galerkin-consistent coarse
+    Hessians with zero extra transport solves).  A factory may carry a
+    static ``fine_equiv_cost`` attribute — the fine-grid-equivalent matvec
+    cost of one application — which ``solve`` folds into
+    ``precond_fine_equiv_matvecs`` (PCG applies the preconditioner
+    ``iters + 1`` times per solve).  The Armijo steepest-descent safeguard always uses the cheap
     spectral preconditioner: the safeguard direction only needs descent, and
     a custom factory may be arbitrarily expensive (XLA's select evaluates
     both ``jnp.where`` operands).
@@ -228,6 +238,9 @@ def solve(
     history: list[dict] = []
     total_matvecs = 0
     total_newton = 0
+    # static per-application cost of a multigrid precond (0.0 for spectral)
+    pc_cost = float(getattr(precond, "fine_equiv_cost", 0.0))
+    total_precond_fe = 0.0
 
     for beta in betas:
         prob = obj.Problem(
@@ -255,6 +268,7 @@ def solve(
             gnorm = log.gnorm
             total_matvecs += int(log.cg_iters)
             total_newton += 1
+            total_precond_fe += (int(log.cg_iters) + 1) * pc_cost
             rec = {
                 "beta": float(beta),
                 "iter": it,
@@ -283,4 +297,5 @@ def solve(
         "history": history,
         "newton_iters": total_newton,
         "hessian_matvecs": total_matvecs,
+        "precond_fine_equiv_matvecs": total_precond_fe,
     }

@@ -42,6 +42,7 @@ class DistContext:
         packed: bool = True,
         interp_method: str = "auto",
         halo_check: str = "error",
+        plan_dtype=None,
     ):
         self.grid = grid
         self.mesh = mesh
@@ -50,12 +51,16 @@ class DistContext:
         self.packed = packed
         self.interp_method = interp_method
         self.halo_check = halo_check
+        self.plan_dtype = plan_dtype
         self.fft = PencilFFT(grid, mesh, axes=self.axes, packed=packed)
         self.ops = SpectralOps(grid, backend=self.fft)
         # per-shard kernel dispatch (Pallas on TPU / gather oracle) wrapped by
-        # the planner's dynamic halo-budget check ("off" disables the check)
+        # the planner's dynamic halo-budget check ("off" disables the check);
+        # plan_dtype packs the cached InterpPlan weights (e.g. jnp.bfloat16
+        # halves the plan's HBM footprint; the contraction stays f32)
         self.halo_interp = make_halo_interp(
-            grid, mesh, axes=self.axes, halo=self.halo, method=interp_method
+            grid, mesh, axes=self.axes, halo=self.halo, method=interp_method,
+            plan_dtype=plan_dtype,
         )
         self.interp = (
             self.halo_interp
@@ -64,23 +69,32 @@ class DistContext:
                 self.halo_interp, mesh, self.axes, self.halo, on_overflow=halo_check
             )
         )
+        self._coarse_cache: dict = {}
 
     def coarsen(self, shape) -> "DistContext":
         """Derive the same-mesh context of a coarser grid (repro.multilevel).
 
         Same pencil axes, halo budget, and interpolation dispatch; the coarse
         grid must still satisfy the mesh divisibility constraints (validated
-        by ``PencilFFT``).
+        by ``PencilFFT``).  Memoized per shape: the multilevel driver and the
+        V-cycle preconditioner both walk the ladder, and each context owns a
+        ``PencilFFT``/halo-interp pair whose ``shard_map`` closures should be
+        built (and traced) once — the cycle re-shards through these cached
+        contexts' pencil transforms, never gathering a fine field.
         """
-        return DistContext(
-            make_grid(shape, self.grid.dtype),
-            self.mesh,
-            axes=self.axes,
-            halo=self.halo,
-            packed=self.packed,
-            interp_method=self.interp_method,
-            halo_check=self.halo_check,
-        )
+        shape = tuple(int(n) for n in shape)
+        if shape not in self._coarse_cache:
+            self._coarse_cache[shape] = DistContext(
+                make_grid(shape, self.grid.dtype),
+                self.mesh,
+                axes=self.axes,
+                halo=self.halo,
+                packed=self.packed,
+                interp_method=self.interp_method,
+                halo_check=self.halo_check,
+                plan_dtype=self.plan_dtype,
+            )
+        return self._coarse_cache[shape]
 
     # -- shardings ---------------------------------------------------------
     def scalar_sharding(self) -> NamedSharding:

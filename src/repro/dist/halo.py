@@ -165,7 +165,7 @@ def _resolve_method(method: str) -> str:
 
 
 def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4,
-                     method: str = "auto"):
+                     method: str = "auto", plan_dtype=None):
     """Build the distributed ``interp`` callable (batched + plan protocol).
 
     Plugs into every ``interp=`` slot of ``repro.core.semilag`` /
@@ -178,7 +178,10 @@ def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4,
     The returned callable carries ``make_plan`` / ``apply_plan`` so the
     solver's plan-once/apply-many path works on the mesh: plan construction
     is elementwise (stays sharded, no collectives) and the planned apply
-    runs the same single ghost-exchange sequence per call.
+    runs the same single ghost-exchange sequence per call.  ``plan_dtype``
+    packs the cached plan weights (``jnp.bfloat16`` halves the plan's HBM
+    footprint per shard; the per-shard contraction still upcasts to f32 —
+    see ``ref.make_interp_plan``).
     """
     a1, a2 = tuple(axes)
     p1, p2 = mesh_axes_size(mesh, a1), mesh_axes_size(mesh, a2)
@@ -205,7 +208,7 @@ def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4,
         out = sm_apply(fields.reshape((-1,) + fields.shape[-3:]), plan.ib, plan.w)
         return out.reshape(lead + out.shape[-3:])
 
-    interp.make_plan = ref.make_interp_plan
+    interp.make_plan = partial(ref.make_interp_plan, dtype=plan_dtype)
     interp.apply_plan = apply_plan
     return interp
 

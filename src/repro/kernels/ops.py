@@ -110,13 +110,16 @@ class Interp:
 
     ``method``/``halo``/``tile`` follow ``tricubic_displace``; the Pallas
     budget ``halo`` also caps plan displacements on that path (checked by
-    the caller via ``core.planner.required_halo``).
+    the caller via ``core.planner.required_halo``).  ``plan_dtype`` packs
+    the cached ``InterpPlan`` weights (e.g. ``jnp.bfloat16`` halves the
+    plan's memory; contraction stays f32 — see ``ref.make_interp_plan``).
     """
 
-    def __init__(self, method: str = "auto", halo: int = 4, tile=None):
+    def __init__(self, method: str = "auto", halo: int = 4, tile=None, plan_dtype=None):
         self.method = method
         self.halo = halo
         self.tile = tile
+        self.plan_dtype = plan_dtype
 
     def _resolved(self, shape3):
         return _resolve(self.method, shape3, self.tile)
@@ -131,7 +134,7 @@ class Interp:
         )
 
     def make_plan(self, disp: jnp.ndarray) -> ref.InterpPlan:
-        return ref.make_interp_plan(disp)
+        return ref.make_interp_plan(disp, dtype=self.plan_dtype)
 
     def apply_plan(self, fields: jnp.ndarray, plan: ref.InterpPlan) -> jnp.ndarray:
         shape3 = fields.shape[-3:]
@@ -147,10 +150,10 @@ class Interp:
         return out.reshape(lead + shape3)
 
 
-def make_interp(method: str = "auto", halo: int = 4, tile=None) -> Interp:
+def make_interp(method: str = "auto", halo: int = 4, tile=None, plan_dtype=None) -> Interp:
     """Factory for the solver's ``interp=`` slots (kept for API symmetry
     with ``repro.dist.halo.make_halo_interp``)."""
-    return Interp(method=method, halo=halo, tile=tile)
+    return Interp(method=method, halo=halo, tile=tile, plan_dtype=plan_dtype)
 
 
 def tricubic_points(field: jnp.ndarray, coords: jnp.ndarray, chunk: int | None = None) -> jnp.ndarray:

@@ -123,8 +123,15 @@ class InterpPlan(NamedTuple):
                   offset from each point's *home* voxel (layout-agnostic;
                   the home index is integral, so ``floor(x + d) = x + ib``).
     ``w``         (3, 4, N1, N2, N3) — separable cubic Lagrange weights at
-                  the fractional part ``disp - ib``, in the f32-promoted
-                  dtype of ``disp`` (f64 displacements keep f64 weights).
+                  the fractional part ``disp - ib``.  Default dtype is the
+                  f32-promoted dtype of ``disp`` (f64 displacements keep
+                  f64 weights); ``make_interp_plan(disp, dtype=bfloat16)``
+                  packs the stored weights to bf16 — the plan is the
+                  dominant per-iteration cache (12 weight planes per
+                  departure field), so packing halves its HBM footprint
+                  while every apply path still *contracts* in >= f32 (the
+                  oracle upcasts to the accumulate dtype, the Pallas kernel
+                  builds its one-hot A-matrices in f32 on the MXU).
     ``halo_need`` () f32 — ``ceil(max |disp|)``: the ghost-layer bound of
                   ``core.planner.required_halo``, cached so the distributed
                   budget check (``dist.halo.make_checked_interp``) costs
@@ -136,18 +143,23 @@ class InterpPlan(NamedTuple):
     halo_need: jnp.ndarray
 
 
-def make_interp_plan(disp: jnp.ndarray) -> InterpPlan:
+def make_interp_plan(disp: jnp.ndarray, dtype=None) -> InterpPlan:
     """Precompute the tricubic operators for ``disp`` (3, N1, N2, N3).
 
-    Weights keep the (f32-promoted) dtype of ``disp`` — an f64 displacement
-    yields f64 weights, so f64 solves lose nothing on the planned path.
+    By default weights keep the (f32-promoted) dtype of ``disp`` — an f64
+    displacement yields f64 weights, so f64 solves lose nothing on the
+    planned path.  ``dtype`` overrides the *storage* dtype of ``w`` (pass
+    ``jnp.bfloat16`` to halve the plan's memory footprint); the weights are
+    always *constructed* in the promoted dtype and only packed on store,
+    and every apply upcasts back to the accumulate dtype before
+    contracting.
     """
     d = disp.astype(jnp.promote_types(disp.dtype, jnp.float32))
     ibf = jnp.floor(d)
     w = jnp.swapaxes(lagrange_weights(d - ibf), 0, 1)  # (3,4,N..)
     return InterpPlan(
         ib=ibf.astype(jnp.int32),
-        w=w,
+        w=w if dtype is None else w.astype(dtype),
         halo_need=jnp.ceil(jnp.max(jnp.abs(d))),
     )
 
@@ -206,9 +218,10 @@ def _interp_apply_impl(store: jnp.ndarray, plan: InterpPlan, lo: int | None) -> 
     lead = store.shape[:-3]
     ff = store.reshape(-1, store.shape[-3] * store.shape[-2] * store.shape[-1])
     ib = plan.ib.reshape(3, -1)
-    w = plan.w.reshape(3, 4, -1)
     flat = _stencil_flat_indices(ib, (n1, n2, n3), store.shape[-3:], lo)
     acc = jnp.promote_types(jnp.result_type(store, plan.w), jnp.float32)
+    # bf16-packed plans upcast here: the contraction always runs in >= f32
+    w = plan.w.reshape(3, 4, -1).astype(acc)
     out = _gather_contract(ff.astype(acc), flat, w, ib.shape[1])
     return out.reshape(lead + (n1, n2, n3)).astype(store.dtype)
 

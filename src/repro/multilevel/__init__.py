@@ -8,11 +8,12 @@ package adds that layer on top of ``repro.core``:
     transfer.py   spectral restriction/prolongation between Grids
     hierarchy.py  GridHierarchy / MultilevelConfig (the level ladder)
     driver.py     multilevel.solve(): restrict -> solve -> prolong warm start
-    precond.py    two-level PCG preconditioner (coarse Hessian + smoother)
+    precond.py    multigrid PCG preconditioners: recursive V-cycle with
+                  Galerkin-consistent coarse Hessians + the two-level scheme
 """
 from repro.multilevel.driver import solve
 from repro.multilevel.hierarchy import GridHierarchy, MultilevelConfig
-from repro.multilevel.precond import make_two_level_precond
+from repro.multilevel.precond import make_two_level_precond, make_vcycle_precond, restrict_state
 from repro.multilevel.transfer import prolong, restrict
 
 __all__ = [
@@ -20,6 +21,8 @@ __all__ = [
     "GridHierarchy",
     "MultilevelConfig",
     "make_two_level_precond",
+    "make_vcycle_precond",
+    "restrict_state",
     "prolong",
     "restrict",
 ]

@@ -9,6 +9,13 @@ solves).  Convergence of warm-started levels is measured against the
 at exactly the tolerance a single-level solve would — just with most of
 the Newton progress already bought at 8-64x cheaper matvecs.
 
+With ``MultilevelConfig(precond=...)`` every warm-started level's PCG is
+preconditioned through the coarser part of the ladder — the fixed
+two-level scheme or the recursive Galerkin V-cycle of
+``repro.multilevel.precond`` — and the coarse matvecs spent inside the
+preconditioner are charged into ``precond_fine_equiv_matvecs`` /
+``total_fine_equiv_matvecs`` next to the outer counts.
+
 Runs single-device (``SpectralOps`` per level) or on the production mesh:
 pass the fine ``DistContext`` and every coarse level derives its own
 context on the same mesh (``ctx.coarsen``), with the spectral transfer
@@ -31,7 +38,7 @@ from repro.core.grid import Grid
 from repro.core.spectral import SpectralOps
 from repro.multilevel import transfer
 from repro.multilevel.hierarchy import GridHierarchy, MultilevelConfig
-from repro.multilevel.precond import make_two_level_precond
+from repro.multilevel.precond import make_two_level_precond, make_vcycle_precond
 
 
 def _cold_gradient_norm(rho_R, rho_T, grid, lcfg, ops, interp):
@@ -103,16 +110,27 @@ def solve(
         )
 
         precond = None
-        if cfg.two_level_precond and lv > 0:
+        if cfg.precond_kind != "none" and lv > 0:
             prob_l = obj.Problem(
                 grid=lgrid, rho_R=rho_R_l, rho_T=rho_T_l, beta=lcfg.beta,
                 n_t=lcfg.n_t, incompressible=lcfg.incompressible,
             )
-            precond = make_two_level_precond(
-                prob_l, lops, level_ops[lv - 1],
-                n_cg=cfg.precond_cg_iters,
-                interp_coarse=level_interp[lv - 1],
-            )
+            if cfg.precond_kind == "two_level":
+                precond = make_two_level_precond(
+                    prob_l, lops, level_ops[lv - 1],
+                    n_cg=cfg.precond_cg_iters,
+                    interp_coarse=level_interp[lv - 1],
+                    galerkin=cfg.galerkin_resolved,
+                )
+            else:  # full V-cycle through every coarser ladder level
+                precond = make_vcycle_precond(
+                    prob_l, level_ops[: lv + 1],
+                    level_interp=level_interp[: lv + 1],
+                    n_cg=cfg.precond_cg_iters,
+                    n_cg_coarse=cfg.precond_coarse_cg_iters,
+                    galerkin=cfg.galerkin_resolved,
+                    min_size=cfg.precond_min_size,
+                )
 
         def level_cb(it, rec, _lv=lv, _shape=lgrid.shape):
             rec["level"] = _lv
@@ -132,6 +150,9 @@ def solve(
         wall = time.time() - t0
         v = out["v"]
         history.extend(out["history"])
+        # preconditioner-internal coarse matvecs, charged in LADDER-fine units
+        # (gn.solve reports them relative to the level's own grid)
+        pc_fe = out.get("precond_fine_equiv_matvecs", 0.0) * hier.fine_equiv_weight(lv)
         levels.append(
             {
                 "level": lv,
@@ -141,18 +162,23 @@ def solve(
                 "newton_iters": out["newton_iters"],
                 "hessian_matvecs": out["hessian_matvecs"],
                 "fine_equiv_matvecs": out["hessian_matvecs"] * hier.fine_equiv_weight(lv),
+                "precond_fine_equiv_matvecs": pc_fe,
                 "wall_s": wall,
                 "rel_gnorm": out["history"][-1]["rel_gnorm"] if out["history"] else None,
             }
         )
 
+    fine_equiv = sum(l["fine_equiv_matvecs"] for l in levels)
+    precond_fe = sum(l["precond_fine_equiv_matvecs"] for l in levels)
     return {
         "v": v,
         "history": history,
         "newton_iters": sum(l["newton_iters"] for l in levels),
         "hessian_matvecs": sum(l["hessian_matvecs"] for l in levels),
         "fine_matvecs": levels[-1]["hessian_matvecs"],
-        "fine_equiv_matvecs": sum(l["fine_equiv_matvecs"] for l in levels),
+        "fine_equiv_matvecs": fine_equiv,
+        "precond_fine_equiv_matvecs": precond_fe,
+        "total_fine_equiv_matvecs": fine_equiv + precond_fe,
         "levels": levels,
         "grids": [list(g.shape) for g in hier.grids],
     }

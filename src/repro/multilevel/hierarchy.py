@@ -26,8 +26,38 @@ class MultilevelConfig:
     shapes: tuple | None = None  # explicit coarse->fine ladder; last == fine grid
     presmooth: bool = True  # Gaussian at each level's bandwidth before restriction
     level_overrides: tuple = ()  # coarse->fine dicts of GNConfig field replacements
-    two_level_precond: bool = False  # coarse-grid preconditioner on the finest level
-    precond_cg_iters: int = 4  # inner CG iterations of the coarse Hessian solve
+    # -- multigrid preconditioner (repro.multilevel.precond) ----------------
+    # "none" | "two_level" (fixed one-coarse-level scheme, PR 2) | "vcycle"
+    # (recursive cycle over every coarser ladder level, Galerkin-consistent
+    # coarse Hessians).  Applied at every warm-started level, not just the
+    # finest: level l is preconditioned through levels 0..l-1.
+    precond: str = "none"
+    two_level_precond: bool = False  # back-compat alias for precond="two_level"
+    precond_cg_iters: int = 4  # inner CG iterations per intermediate level
+    precond_coarse_cg_iters: int = 10  # (near-)exact coarsest-level CG solve
+    precond_min_size: int = 8  # V-cycle recursion floor (points per axis)
+    # None resolves per scheme: "vcycle" restricts the Hessian's state fields
+    # (Galerkin), "two_level" keeps the PR-2 re-linearized coarse images.
+    galerkin_coarse: bool | None = None
+
+    def __post_init__(self):
+        if self.precond not in ("none", "two_level", "vcycle"):
+            raise ValueError(
+                f"unknown precond {self.precond!r}: choose 'none', 'two_level', "
+                "or 'vcycle'"
+            )
+
+    @property
+    def precond_kind(self) -> str:
+        if self.precond == "none" and self.two_level_precond:
+            return "two_level"
+        return self.precond
+
+    @property
+    def galerkin_resolved(self) -> bool:
+        if self.galerkin_coarse is None:
+            return self.precond_kind == "vcycle"
+        return self.galerkin_coarse
 
 
 def _halved(shape: tuple[int, int, int], levels: int, min_size: int):

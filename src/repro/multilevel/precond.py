@@ -1,30 +1,275 @@
-"""Two-level PCG preconditioner: coarse-grid Hessian solve + spectral smoother.
+"""Multigrid preconditioners for the Gauss-Newton PCG: recursive V-cycle
+(Galerkin-consistent coarse operators) and the legacy two-level scheme.
 
 The paper's ``(beta Lap^2)^{-1}`` preconditioner is mesh- but not
 beta-independent (Table V): as beta shrinks, the data term dominates the
 low-frequency block of the Hessian and CG iteration counts grow.  The
-classic two-level fix (CLAIRE, 1808.04487 §3) solves that block on a
-coarse grid where matvecs are 8-64x cheaper:
+classic multilevel fix (CLAIRE, 1808.04487 §3; inexact Newton-Krylov,
+1408.6299) solves that block on coarser grids where matvecs are 8-64x
+cheaper.  Every level applies the same *exact spectral splitting*
 
-    M^{-1} r  =  P H_c^{-1} R r_low  +  (beta Lap^2)^{-1} r_high
+    M_l^{-1} r  =  P_l (coarse solve on R_l r)  +  (beta Lap^2)^{-1} r_high,
+    r_high      =  r - P_l R_l r,
 
-Because ``restrict``/``prolong`` are sharp spectral projections, the
-splitting ``r = r_low + r_high`` with ``r_low = P R r`` is exact and the
-two halves act on L2-orthogonal subspaces: the coarse solve captures the
-data-dominated low modes, the spectral smoother is near-exact on the
-regularization-dominated high modes.  ``H_c`` is the Gauss-Newton Hessian
-of the *restricted* problem at the *restricted* velocity, rebuilt from the
-fresh ``NewtonState`` once per Newton iteration (the factory protocol of
-``gn.newton_iteration``), and applied inexactly by a fixed, small number
-of inner CG iterations — cheap enough to amortize, accurate enough that
-the slight nonlinearity does not disturb the outer PCG in practice.
+where ``restrict``/``prolong`` are sharp Fourier projections, so the two
+halves act on L2-orthogonal subspaces: the coarse solve captures the
+data-dominated low modes, the spectral inverse is near-exact on the
+regularization-dominated high modes — and costs ZERO matvecs at the level
+being preconditioned.
+
+**V-cycle** (``make_vcycle_precond``): the coarse block is solved by a few
+CG iterations on ``H_{l-1}``, themselves preconditioned by the *same
+splitting one level down* — the recursion visits every level of the
+``GridHierarchy`` once per application (coarsest level last, solved
+(near-)exactly by ``n_cg_coarse`` spectral-preconditioned CG iterations).
+This is the Krylov-smoothed V-cycle (a K-cycle in the multigrid
+literature): the per-level CG sweeps are the smoother, the spectral
+high-mode inverse handles what smoothing cannot, and the cycle's
+contraction factor is grid-independent because the coarse operators are
+Galerkin-consistent (below).
+
+**Galerkin-consistent coarse operators** (``restrict_state``): the GN
+Hessian closes over per-Newton-iteration state — ``grad rho(t_k)``, the
+SL plan's departure displacement fields, ``div v``.  Re-linearizing from
+re-restricted *images* (the PR-2 two-level construction, kept as
+``galerkin=False``) re-runs forward+adjoint transports at every level and
+yields a coarse operator that only *approximates* the restriction of the
+fine one.  Restricting the state fields themselves makes the coarse
+Hessian (to interpolation-discretization error) the actual Galerkin
+product ``R H P``: no coarse transport solves at all, and the coarse
+correction stays aligned with the fine operator as the grid is refined —
+the property that makes the cycle's iteration count level-independent
+(pinned by ``tests/test_multilevel.py::test_vcycle_grid_independence``).
+
+Cost accounting: all coarse-level matvecs run inside the preconditioner,
+invisible to the outer PCG counter.  Each factory therefore exposes
+``fine_equiv_cost`` — the *fine-grid-equivalent* matvec cost of one
+application, computed statically from the ladder's point-count ratios and
+the fixed inner iteration counts — which ``gn.solve`` multiplies by the
+number of applications into ``precond_fine_equiv_matvecs`` (the honest
+column of ``BENCH_multilevel.json`` / EXPERIMENTS §Multilevel).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core import gauss_newton as gn
 from repro.core import objective as obj
+from repro.core.planner import SLPlan
 from repro.core.spectral import SpectralOps
+from repro.kernels import ref
 from repro.multilevel import transfer
+
+
+def restrict_state(
+    state: obj.NewtonState,
+    prob: obj.Problem,
+    fine_ops: SpectralOps,
+    coarse_ops: SpectralOps,
+    interp_coarse=None,
+):
+    """Galerkin-consistent coarse ``(NewtonState, Problem)`` pair.
+
+    Restricts exactly the fields ``obj.gn_hessian_matvec`` closes over:
+    the cached spectral gradients ``grad rho(t_k)`` (one batched spectral
+    truncation over all time slices), the SL plan's departure displacement
+    fields (rescaled into coarse grid units; the ``InterpPlan`` operators
+    are rebuilt elementwise from the restricted displacements), and
+    ``div v`` for the compressible source terms.  No transport solves and
+    no image re-differentiation happen at the coarse level — the coarse
+    Hessian *is* the restriction of the fine one, up to the coarse grid's
+    interpolation discretization error.
+
+    Fields the GN matvec never reads (``rho_series``, ``lam_series``, the
+    gradient/objective diagnostics, the images) are left ``None``.
+    Composable: restricting an already-restricted state walks the Galerkin
+    ladder down exactly (spectral truncations compose).
+    """
+    fine, coarse = fine_ops.grid.shape, coarse_ops.grid.shape
+
+    def R(f):
+        return transfer.restrict(f, fine_ops, coarse_ops)
+
+    # displacements are stored in grid-index units: physical displacement is
+    # disp * h, and h doubles per coarsening, so grid-unit values scale by
+    # the per-axis point ratio under restriction.
+    ratio = jnp.asarray(
+        [c / f for c, f in zip(coarse, fine)], dtype=state.plan.disp_fwd.dtype
+    ).reshape(3, 1, 1, 1)
+    disp_fwd = R(state.plan.disp_fwd) * ratio
+    disp_adj = None if state.plan.disp_adj is None else R(state.plan.disp_adj) * ratio
+    divv = None if state.plan.divv is None else R(state.plan.divv)
+    planner = (
+        ref.make_interp_plan
+        if interp_coarse is None
+        else getattr(interp_coarse, "make_plan", None)
+    )
+    plan_c = SLPlan(
+        disp_fwd=disp_fwd,
+        disp_adj=disp_adj,
+        divv=divv,
+        dt=state.plan.dt,
+        n_t=state.plan.n_t,
+        iplan_fwd=planner(disp_fwd) if planner is not None else None,
+        iplan_adj=planner(disp_adj) if planner is not None and disp_adj is not None else None,
+    )
+    state_c = obj.NewtonState(
+        v=None,
+        plan=plan_c,
+        rho_series=None,
+        grad_rho_series=R(state.grad_rho_series),
+        lam_series=None,
+        g=None,
+        misfit=None,
+        reg=None,
+        j_val=None,
+    )
+    prob_c = obj.Problem(
+        grid=coarse_ops.grid,
+        rho_R=None,  # never read by the Hessian matvec
+        rho_T=None,
+        beta=prob.beta,
+        n_t=prob.n_t,
+        incompressible=prob.incompressible,
+    )
+    return state_c, prob_c
+
+
+def _precond_fine_equiv_cost(level_ops, n_cg: int, n_cg_coarse: int) -> float:
+    """Static fine-equivalent matvec cost of ONE preconditioner application.
+
+    An application at level ``l`` runs ``iters`` inner CG iterations on
+    ``H_{l-1}`` (``iters`` level-(l-1) matvecs, charged at the level's
+    point-count ratio) with ``iters + 1`` applications of the level-(l-1)
+    preconditioner (the spectral inverse — free in matvec units — at the
+    coarsest level, the recursion otherwise).
+    """
+    n_fine = level_ops[-1].grid.num_points
+    w = [ops.grid.num_points / n_fine for ops in level_ops]
+
+    def apply_cost(l: int) -> float:
+        iters = n_cg_coarse if l - 1 == 0 else n_cg
+        below = 0.0 if l - 1 == 0 else apply_cost(l - 1)
+        return iters * w[l - 1] + (iters + 1) * below
+
+    return apply_cost(len(level_ops) - 1)
+
+
+def make_vcycle_precond(
+    prob: obj.Problem,
+    level_ops,
+    *,
+    level_interp=None,
+    n_cg: int = 4,
+    n_cg_coarse: int = 10,
+    galerkin: bool = True,
+    min_size: int = 8,
+):
+    """Build the V-cycle ``precond`` factory for ``gn.newton_iteration``.
+
+    ``level_ops`` is the coarse-to-fine ``SpectralOps`` ladder whose LAST
+    entry is the level being preconditioned (>= 2 entries; exactly 2 gives
+    the two-level scheme).  ``level_interp`` supplies the matching interp
+    callables (``None`` entries use the local oracle).  ``prob`` is the
+    fine-level problem: with ``galerkin=True`` only its scalars
+    (beta/n_t/incompressible) matter — the coarse operators come from
+    restricting the runtime ``NewtonState``; with ``galerkin=False`` its
+    images are smooth-restricted once per ladder level here and every
+    coarse Hessian is re-linearized from the restricted velocity per Newton
+    iteration (the PR-2 construction, kept for A/B benchmarking).
+
+    ``min_size`` floors the recursion: ladder levels with fewer grid points
+    per axis are dropped from the cycle (a 4^3 "Hessian" is all pseudo-
+    spectral aliasing — its correction misdirects the level above; on the
+    production 64^3->256^3 ladders the floor never binds).  At least the
+    immediate coarse level is always kept.
+
+    The returned factory carries ``fine_equiv_cost`` (see module
+    docstring); ``gn.solve`` reads it for the honest matvec accounting.
+    """
+    level_ops = list(level_ops)
+    if len(level_ops) < 2:
+        raise ValueError("V-cycle needs at least 2 levels (coarse + fine)")
+    level_interp = list(level_interp) if level_interp is not None else [None] * len(level_ops)
+    # recursion floor: drop unresolvable leading (coarsest) levels
+    keep = [
+        i for i, ops in enumerate(level_ops)
+        if min(ops.grid.shape) >= min_size or i >= len(level_ops) - 2
+    ]
+    level_ops = [level_ops[i] for i in keep]
+    level_interp = [level_interp[i] for i in keep]
+    n_levels = len(level_ops)
+    fine_ops = level_ops[-1]
+
+    images = None
+    if not galerkin:
+        # legacy path: smooth-restrict the images once, down the ladder
+        images, rR, rT = [], prob.rho_R, prob.rho_T
+        for lo, hi in zip(reversed(level_ops[:-1]), reversed(level_ops[1:])):
+            rR = transfer.smooth_restrict(rR, hi, lo)
+            rT = transfer.smooth_restrict(rT, hi, lo)
+            images.append((rR, rT))
+        images = list(reversed(images))  # coarse -> fine-1
+
+    def factory(state: obj.NewtonState, prob_rt: obj.Problem):
+        # ---- per-Newton-iteration coarse operator ladder (fine -> coarse)
+        states: list = [None] * n_levels
+        probs: list = [None] * n_levels
+        states[-1], probs[-1] = state, prob_rt
+        for l in range(n_levels - 2, -1, -1):
+            if galerkin:
+                states[l], probs[l] = restrict_state(
+                    states[l + 1], probs[l + 1], level_ops[l + 1], level_ops[l],
+                    level_interp[l],
+                )
+            else:
+                rR, rT = images[l]
+                probs[l] = obj.Problem(
+                    grid=level_ops[l].grid, rho_R=rR, rho_T=rT, beta=prob_rt.beta,
+                    n_t=prob_rt.n_t, incompressible=prob_rt.incompressible,
+                )
+                v_c = transfer.restrict(states[l + 1].v, level_ops[l + 1], level_ops[l])
+                states[l] = obj.newton_state(v_c, probs[l], level_ops[l], level_interp[l])
+
+        def matvec(l):
+            return lambda p: obj.gn_hessian_matvec(
+                p, states[l], probs[l], level_ops[l], level_interp[l]
+            )
+
+        def spectral(l):
+            ops = level_ops[l]
+
+            def apply(r):
+                z = ops.precond_apply(r, prob_rt.beta)
+                return ops.leray(z) if prob_rt.incompressible else z
+
+            return apply
+
+        def apply_at(l):
+            """M_l^{-1}: exact spectral split + recursive coarse-block solve."""
+            ops_f, ops_c = level_ops[l], level_ops[l - 1]
+            inner_pc = spectral(0) if l - 1 == 0 else apply_at(l - 1)
+            iters = n_cg_coarse if l - 1 == 0 else n_cg
+            mv_c = matvec(l - 1)
+
+            def apply(r):
+                r_c = transfer.restrict(r, ops_f, ops_c)
+                # exact spectral split BEFORE any projection of the coarse half
+                r_high = r - transfer.prolong(r_c, ops_c, ops_f)
+                if prob_rt.incompressible:
+                    r_c = ops_c.leray(r_c)
+                sol = gn.pcg(mv_c, r_c, inner_pc, ops_c.grid.inner, 0.0, iters)
+                z = transfer.prolong(sol.x, ops_c, ops_f)
+                z = z + ops_f.precond_apply(r_high, prob_rt.beta)
+                return ops_f.leray(z) if prob_rt.incompressible else z
+
+            return apply
+
+        return apply_at(n_levels - 1)
+
+    factory.fine_equiv_cost = _precond_fine_equiv_cost(level_ops, n_cg, n_cg_coarse)
+    factory.n_levels = n_levels
+    return factory
 
 
 def make_two_level_precond(
@@ -34,53 +279,21 @@ def make_two_level_precond(
     *,
     n_cg: int = 4,
     interp_coarse=None,
+    galerkin: bool = False,
 ):
-    """Build the ``precond`` factory for ``gn.newton_iteration``.
+    """The fixed two-level scheme (PR 2) as a V-cycle special case.
 
-    ``prob`` supplies the fine-level images (restricted once, here); the
-    coarse Hessian is re-linearized per Newton iteration from the restricted
-    current velocity, at the beta of the *runtime* ``Problem`` the factory
-    receives — the continuation schedule changes beta between the sub-solves
-    of a level, and a preconditioner frozen at the level's final beta would
-    be misscaled by orders of magnitude on the warm-up solves.
+    Kept as the A/B baseline of the benchmark sweep: one coarse level,
+    ``n_cg`` inner CG iterations, and (by default) the legacy
+    re-linearized coarse Hessian — restricted images re-transported at the
+    coarse level per Newton iteration — rather than the Galerkin-restricted
+    state fields (``galerkin=True`` upgrades just that part).
     """
-    coarse_grid = coarse_ops.grid
-    rho_R_c = transfer.smooth_restrict(prob.rho_R, fine_ops, coarse_ops)
-    rho_T_c = transfer.smooth_restrict(prob.rho_T, fine_ops, coarse_ops)
-
-    def factory(state: obj.NewtonState, prob_rt: obj.Problem):
-        prob_c = obj.Problem(
-            grid=coarse_grid,
-            rho_R=rho_R_c,
-            rho_T=rho_T_c,
-            beta=prob_rt.beta,
-            n_t=prob_rt.n_t,
-            incompressible=prob_rt.incompressible,
-        )
-        v_c = transfer.restrict(state.v, fine_ops, coarse_ops)
-        state_c = obj.newton_state(v_c, prob_c, coarse_ops, interp_coarse)
-
-        def matvec_c(p):
-            return obj.gn_hessian_matvec(p, state_c, prob_c, coarse_ops, interp_coarse)
-
-        def precond_c(r):
-            z = coarse_ops.precond_apply(r, prob_c.beta)
-            return coarse_ops.leray(z) if prob_c.incompressible else z
-
-        def apply(r):
-            r_c = transfer.restrict(r, fine_ops, coarse_ops)
-            # exact spectral split BEFORE any projection of the coarse half
-            r_high = r - transfer.prolong(r_c, coarse_ops, fine_ops)
-            if prob_c.incompressible:
-                r_c = coarse_ops.leray(r_c)
-            # coarse block: a few CG iterations on H_c z_c = R r
-            sol = gn.pcg(matvec_c, r_c, precond_c, coarse_grid.inner, 0.0, n_cg)
-            z_low = transfer.prolong(sol.x, coarse_ops, fine_ops)
-            # smoother block: spectral inverse on the unresolved complement
-            z_high = fine_ops.precond_apply(r_high, prob_rt.beta)
-            z = z_low + z_high
-            return fine_ops.leray(z) if prob_rt.incompressible else z
-
-        return apply
-
-    return factory
+    return make_vcycle_precond(
+        prob,
+        [coarse_ops, fine_ops],
+        level_interp=[interp_coarse, None],
+        n_cg=n_cg,
+        n_cg_coarse=n_cg,
+        galerkin=galerkin,
+    )

@@ -1,0 +1,47 @@
+"""Documentation consistency: the measured records and the documents that
+cite them must not drift apart.
+
+Every ``BENCH_*.json`` committed at the repo root is a measured artefact
+(written by ``python -m benchmarks.run``) that EXPERIMENTS.md folds into
+the paper's tables — a record nobody references is either dead weight or
+a table the docs forgot.  Cheap structural pins only; the numeric pins
+live next to the suites that produce each record (``test_interp_plan.py``,
+``test_multilevel.py``).
+"""
+import glob
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _read(name: str) -> str:
+    path = os.path.join(ROOT, name)
+    assert os.path.exists(path), f"{name} missing from repo root"
+    with open(path) as f:
+        return f.read()
+
+
+def test_every_bench_record_is_referenced_from_experiments():
+    experiments = _read("EXPERIMENTS.md")
+    records = sorted(
+        os.path.basename(p) for p in glob.glob(os.path.join(ROOT, "BENCH_*.json"))
+    )
+    assert records, "no BENCH_*.json records at repo root"
+    missing = [r for r in records if r not in experiments]
+    assert not missing, f"EXPERIMENTS.md does not reference: {missing}"
+
+
+def test_experiments_citations_exist():
+    """Files EXPERIMENTS.md points at (benchmarks, scripts, results) exist."""
+    experiments = _read("EXPERIMENTS.md")
+    for rel in ("benchmarks/README.md", "ROADMAP.md", "docs/ARCHITECTURE.md"):
+        assert rel in experiments, f"EXPERIMENTS.md should cross-reference {rel}"
+        assert os.path.exists(os.path.join(ROOT, rel)), f"{rel} missing"
+
+
+def test_architecture_doc_names_the_layers():
+    arch = _read(os.path.join("docs", "ARCHITECTURE.md"))
+    for module in ("core", "kernels", "dist", "multilevel", "launch"):
+        assert f"{module}/" in arch, (
+            f"docs/ARCHITECTURE.md should map the {module} layer"
+        )

@@ -101,6 +101,55 @@ def test_pallas_planned_matches_ref(rng):
 
 
 # ----------------------------------------------------------------------- #
+# bf16-packed plan weights (make_interp_plan(dtype=...), ROADMAP follow-up)
+# ----------------------------------------------------------------------- #
+def test_plan_bf16_packing_parity(rng):
+    """Packing w to bf16 halves the plan's weight storage; the apply still
+    contracts in f32 (output dtype unchanged, error at bf16 rounding level,
+    far below the tricubic discretization error)."""
+    f, d = _problem(rng)
+    p32 = ref.make_interp_plan(d)
+    pb = ref.make_interp_plan(d, dtype=jnp.bfloat16)
+    assert pb.w.dtype == jnp.bfloat16
+    assert pb.ib.dtype == jnp.int32 and pb.halo_need.dtype == jnp.float32
+    np.testing.assert_array_equal(pb.ib, p32.ib)
+    out32, outb = ref.interp_apply(f, p32), ref.interp_apply(f, pb)
+    assert outb.dtype == f.dtype  # contraction upcasts, output stays f32
+    np.testing.assert_allclose(outb, out32, atol=5e-2)
+    assert float(jnp.max(jnp.abs(outb - out32))) > 0.0  # actually packed
+
+
+def test_plan_bf16_executor_and_pallas(rng):
+    """The flag rides the Interp executor (kernels.ops.make_interp) and the
+    Pallas planned kernel (one-hot A-matrices built in f32 from bf16 w)."""
+    shape, tile, halo = (16, 16, 32), (8, 8, 16), 4
+    f, d = _problem(rng, shape, c=3, lim=halo - 0.1)
+    expect = _looped(f, d)
+    interp = kops.make_interp(method="ref", plan_dtype=jnp.bfloat16)
+    plan = interp.make_plan(d)
+    assert plan.w.dtype == jnp.bfloat16
+    np.testing.assert_allclose(interp.apply_plan(f, plan), expect, atol=5e-2)
+    out_pl = tricubic_apply_pallas(f, plan, tile=tile, halo=halo, interpret=True)
+    np.testing.assert_allclose(out_pl, expect, atol=5e-2)
+
+
+def test_plan_bf16_through_solver_config(gn_setup):
+    """GNConfig(plan_dtype="bfloat16") threads the packing into the cached
+    SLPlan operators without disturbing the transports beyond rounding."""
+    from repro.core import gauss_newton as gn
+
+    g, ops, prob, v = gn_setup
+    interp = gn._interp_fn(gn.GNConfig(plan_dtype="bfloat16"))
+    plan = make_plan(v, g, ops, 4, incompressible=False, interp=interp)
+    assert plan.iplan_fwd.w.dtype == jnp.bfloat16
+    assert plan.iplan_adj.w.dtype == jnp.bfloat16
+    ref_series = semilag.transport_state(prob.rho_T, make_plan(v, g, ops, 4, False))
+    np.testing.assert_allclose(
+        semilag.transport_state(prob.rho_T, plan, interp), ref_series, atol=5e-2
+    )
+
+
+# ----------------------------------------------------------------------- #
 # ops.Interp executor protocol
 # ----------------------------------------------------------------------- #
 @pytest.mark.parametrize("method", ["ref", "pallas"])
