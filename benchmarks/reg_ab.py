@@ -1,0 +1,92 @@
+"""A/B dry-run of the registration communication knobs on the production mesh.
+
+Compares, per solver component (gradient assembly vs one GN Hessian
+matvec), the per-chip collective bytes/counts of:
+
+* ``unpacked``        — ``PencilFFT(packed=False)``: every real transform
+                        pays a full c2c ride each way;
+* ``packed``          — the default: paired real fields per c2c transform
+                        on both sides (halved all-to-all bytes);
+* ``packed+chunked``  — additionally ``chunk="auto"``: the pipelined
+                        transform that overlaps each chunk's all-to-all
+                        with the next chunk's local FFTs (bytes are
+                        unchanged — the win is overlap, visible on real
+                        hardware rather than in the dry-run byte columns).
+
+This is a *dry run* (nothing executes): cells are lowered+compiled on
+placeholder host devices exactly like ``repro.launch.dryrun``, and the
+collective schedule is harvested from the compiled HLO.
+
+    PYTHONPATH=src python -m benchmarks.reg_ab                 # claire-256
+    PYTHONPATH=src python -m benchmarks.reg_ab --cell claire-64 \
+        --devices 512 --out results/reg_perf_ab.json
+
+Standalone on purpose (not a ``benchmarks.run`` suite): it needs the
+placeholder device count set *before* jax initializes, so everything jax
+is imported inside ``main()`` — importing this module never mutates
+``XLA_FLAGS`` or touches device state.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="A/B dry-run of registration FFT communication knobs"
+    )
+    ap.add_argument("--cell", default="claire-256",
+                    help="REGISTRATION_GRIDS cell name (default: claire-256)")
+    ap.add_argument("--devices", type=int, default=512,
+                    help="placeholder host device count (must cover the mesh)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="lower on the 2x16x16 multi-pod mesh (folded pencil axis)")
+    ap.add_argument("--out", default="results/reg_perf_ab.json")
+    args = ap.parse_args()
+
+    # placeholder devices BEFORE any jax import (jax locks the count at
+    # init); appended LAST so --devices wins over any count flag already in
+    # the environment (duplicate XLA flags resolve last-one-wins)
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.devices}"
+    )
+    from repro.configs import REGISTRATION_GRIDS
+    from repro.core.grid import make_grid
+    from repro.dist.context import DistContext
+    from repro.launch.dryrun import _reg_component_costs
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    axes = (("pod", "data"), "model") if args.multi_pod else ("data", "model")
+    rcfg = REGISTRATION_GRIDS[args.cell]
+    grid = make_grid(rcfg.grid)
+    variants = [
+        ("unpacked", dict(packed=False)),
+        ("packed", dict(packed=True)),
+        ("packed+chunked", dict(packed=True, chunk="auto")),
+    ]
+    out = {"cell": args.cell, "mesh": "2x16x16" if args.multi_pod else "16x16"}
+    for name, kw in variants:
+        ctx = DistContext(grid, mesh, axes=axes, halo=rcfg.halo, **kw)
+        comps = _reg_component_costs(grid, ctx, rcfg, mesh, mesh.size)
+        out[name] = comps
+        for c, v in comps.items():
+            a2a = v["collectives"].get("all-to-all", {})
+            cp = v["collectives"].get("collective-permute", {})
+            print(
+                f"{name:15s} {c:15s} coll={v['t_collective_s']*1e3:8.3f}ms  "
+                f"a2a={a2a.get('bytes', 0)/1e6:8.1f}MB/{a2a.get('count', 0):4d}  "
+                f"halo={cp.get('bytes', 0)/1e6:6.1f}MB  "
+                f"mem={v['t_memory_s']*1e3:8.3f}ms"
+            )
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    fft_suite,
     interp_suite,
     kernel_microbench,
     lm_roofline,
@@ -29,6 +30,7 @@ TABLES = {
     "table5": table5_beta.main,
     "kernel": kernel_microbench.main,
     "interp": interp_suite.main,
+    "fft": fft_suite.main,
     "lm_roofline": lm_roofline.main,
     "multilevel": multilevel_c2f.main,
 }

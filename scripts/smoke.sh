@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 smoke: the fast test tier, the interp microbench at toy size
-# (plan/batch/ghost-exchange regressions fail fast: the suite asserts the
-# counted collective-permute structure on every run), one tiny
-# coarse-to-fine registration end-to-end (restrict -> coarse GN solve ->
-# prolong warm start -> fine GN solve -> diffeomorphism check), and a toy
-# 3-level V-cycle cell (Galerkin multigrid preconditioner vs spectral).
-# Total budget ~6 min on the CPU container.
+# Tier-1 smoke: the fast test tier, the interp + fft microbenches at toy
+# size (plan/batch/ghost-exchange and transform-coalescing/chunked-FFT
+# regressions fail fast: both suites assert their counted collective
+# structure on every run), one tiny coarse-to-fine registration
+# end-to-end (restrict -> coarse GN solve -> prolong warm start -> fine
+# GN solve -> diffeomorphism check), and a toy 3-level V-cycle cell
+# (Galerkin multigrid preconditioner vs spectral).
+# Total budget ~8 min on the CPU container.
 #
 #     bash scripts/smoke.sh
 set -euo pipefail
@@ -17,6 +18,12 @@ python -m pytest -x -q -m "not slow"
 # toy-size interp suite: writes results/BENCH_interp_toy.json (gitignored),
 # never the committed BENCH_interp.json record
 BENCH_INTERP_TOY=1 python -m benchmarks.run --suite interp
+
+# toy-size fft suite: counted all-to-alls for the coalesced GN matvec and
+# the stage-A SpectralBatch ride, packed-vs-unpacked bytes, chunked-FFT
+# parity — writes results/BENCH_fft_toy.json (gitignored) and asserts the
+# >= 2x coalescing structure on every run
+BENCH_FFT_TOY=1 python -m benchmarks.run --suite fft
 
 # toy-size multilevel suite: C2F record + the spectral/two-level/V-cycle
 # precond sweep at 16^3, written to results/BENCH_multilevel_toy.json

@@ -43,7 +43,10 @@ class GNConfig:
     # explicit interp= (the distributed path) carries its own setting via
     # DistContext(plan_dtype=...) / make_halo_interp(plan_dtype=...).
     plan_dtype: str | None = None
-    fused_elliptic: bool = False  # beyond-paper: fuse beta Lap^2 + Leray (+precond)
+    # DEPRECATED no-op: the transform-coalesced hot path (SpectralBatch +
+    # fused k-space assemblies in core/objective.py) is now unconditional
+    # and numerically identical to the old fused=True routing.
+    fused_elliptic: bool = False
     gauss_newton: bool = True  # False: full Newton Hessian (paper eq. (5), all terms)
 
 
@@ -139,23 +142,18 @@ def newton_iteration(
     """
     interp = interp or _interp_fn(cfg)
     grid = prob.grid
-    fused = cfg.fused_elliptic
-    state = obj.newton_state(v, prob, ops, interp, fused=fused)
+    state = obj.newton_state(v, prob, ops, interp)
     gnorm = jnp.sqrt(grid.norm_sq(state.g))
 
     # ---- Newton step: PCG on H dv = -g with (beta Lap^2)^{-1} preconditioner
     def matvec(p):
         if cfg.gauss_newton:
-            return obj.gn_hessian_matvec(p, state, prob, ops, interp, fused=fused)
+            return obj.gn_hessian_matvec(p, state, prob, ops, interp)
         return obj.full_hessian_matvec(p, state, prob, ops, interp)
 
     def spectral_precond(r):
-        if fused:
-            return ops.precond_project(r, prob.beta, prob.incompressible)
-        z = ops.precond_apply(r, prob.beta)
-        if prob.incompressible:
-            z = ops.leray(z)
-        return z
+        # single coalesced ride pair: P (beta Lap^2)^{-1} r
+        return ops.precond_project(r, prob.beta, prob.incompressible)
 
     precond = spectral_precond if precond is None else precond(state, prob)
 

@@ -16,6 +16,26 @@ in incompressible mode needs *zero* transport FFTs and *zero* interpolation
 weight constructions (only the gathers/contractions themselves plus the
 regularization/Leray diagonal ops), versus 8 n_t FFTs in the paper's
 Alg. 2 accounting.
+
+**Transform coalescing** (this PR's hot-path restructuring): every spectral
+round trip below rides a ``SpectralOps.batch()`` or an explicitly fused
+k-space combine, so the per-stage transform count is minimal:
+
+* ``newton_state`` stage A — ``div v`` (compressible), ``beta Lap^2 v``,
+  and ``Lap v`` (the regularization energy) all depend only on ``v``:
+  one coalesced ride pair instead of three.
+* the gradient assembly — ``g = beta Lap^2 v + P b`` reuses stage A's
+  ``beta Lap^2 v``; only ``P b`` costs a ride (none when compressible).
+* ``gn_hessian_matvec`` — ``beta Lap^2 vt + P bt`` is ONE ride pair
+  (``reg_plus_project``); compressible mode skips ``bt``'s transform
+  entirely.  The all-to-all count per matvec is pinned ≥2x below the
+  uncoalesced composition by ``tests/test_coalesce.py``.
+* ``full_hessian_matvec`` — the ``div(lam vt)`` series and the
+  ``grad rho~(t)`` series share one coalesced ride pair.
+
+The legacy ``fused`` keyword is kept for call-site compatibility but is a
+no-op: the coalesced assembly (identical numerics to ``fused=True``) is
+now unconditional.
 """
 from __future__ import annotations
 
@@ -78,9 +98,23 @@ def newton_state(
 ) -> NewtonState:
     """Forward + adjoint solves, reduced gradient, and the matvec cache.
 
-    ``fused=True`` assembles ``beta Lap^2 v + P b`` in one spectral round
-    trip (beyond-paper optimization; see EXPERIMENTS §Perf)."""
-    plan = make_plan(v, prob.grid, ops, prob.n_t, prob.incompressible, interp)
+    Spectral stage A (everything that depends only on ``v``: ``div v``,
+    ``beta Lap^2 v``, ``Lap v``) rides ONE coalesced transform pair; the
+    cached gradient series ``grad rho(t_k)`` is one batched ride over all
+    time slices; in incompressible mode ``P b`` costs one more.  ``fused``
+    is accepted for compatibility and ignored — the coalesced assembly is
+    unconditional (same numerics as the old ``fused=True`` path).
+    """
+    del fused  # superseded by transform coalescing (see module docstring)
+    # ---- stage A: one ride pair for every v-only spectral op
+    with ops.batch() as sb:
+        h_divv = None if prob.incompressible else sb.div(v)
+        h_regv = sb.reg_apply(v, prob.beta)
+        h_lapv = sb.laplacian(v)
+    plan = make_plan(
+        v, prob.grid, ops, prob.n_t, prob.incompressible, interp,
+        divv=None if h_divv is None else h_divv.get(),
+    )
     rho_series = semilag.transport_state(prob.rho_T, plan, interp)
     rho1 = rho_series[-1]
 
@@ -92,15 +126,13 @@ def newton_state(
     grad_rho_series = jnp.swapaxes(ops.grad(rho_series), 0, 1)  # (n_t+1, 3, N..)
 
     b = semilag.time_integral_b(lam_series, grad_rho_series, plan.dt)
-    # eq. (4): g = beta Lap^2 v + P b, with lam(1) = rho_R - rho(1).
+    # eq. (4): g = beta Lap^2 v + P b, with lam(1) = rho_R - rho(1);
+    # beta Lap^2 v comes from stage A, so only P b can cost a transform.
     # (sanity: at v=0, <g,w> = <(rho_R-rho_T) grad rho_T, w> = dJ/deps.)
-    if fused:
-        g = ops.reg_plus_project(v, b, prob.beta, prob.incompressible)
-    else:
-        g = ops.reg_apply(v, prob.beta) + _project(ops, b, prob.incompressible)
+    g = h_regv.get() + _project(ops, b, prob.incompressible)
 
     misfit = 0.5 * prob.grid.norm_sq(rho1 - prob.rho_R)
-    reg = ops.reg_energy(v, prob.beta)
+    reg = 0.5 * prob.beta * prob.grid.norm_sq(h_lapv.get())
     return NewtonState(
         v=v,
         plan=plan,
@@ -126,16 +158,21 @@ def gn_hessian_matvec(
 
     Two transport solves (incremental state forward, incremental adjoint
     backward) — both interpolation-only thanks to the grad-rho cache — plus
-    the diagonal regularization and Leray ops.
+    the elliptic assembly in ONE coalesced ride pair:
+    ``beta Lap^2 vt + P bt`` forwards ``[vt, bt]`` together and inverts the
+    3-component combine (incompressible); compressible mode adds ``bt`` in
+    real space and transforms only ``vt``.  ``fused`` is accepted for
+    compatibility and ignored.
     """
+    del fused
     rho1_t = semilag.transport_inc_state(vtilde, state.grad_rho_series, state.plan, interp)
     lamt_series = semilag.transport_inc_adjoint(-rho1_t, state.plan, interp)
     bt = semilag.time_integral_b(lamt_series, state.grad_rho_series, state.plan.dt)
     # eq. (5e): H vt = beta Lap^2 vt + P bt, with lam~(1) = -rho~(1);
     # the data block is the Gauss-Newton (J^T J) term — PSD (tested).
-    if fused:
-        return ops.reg_plus_project(vtilde, bt, prob.beta, prob.incompressible)
-    return ops.reg_apply(vtilde, prob.beta) + _project(ops, bt, prob.incompressible)
+    if prob.incompressible:
+        return ops.reg_plus_project(vtilde, bt, prob.beta, True)
+    return ops.reg_apply(vtilde, prob.beta) + bt
 
 
 def full_hessian_matvec(
@@ -145,19 +182,29 @@ def full_hessian_matvec(
 
     vs Gauss-Newton this keeps (i) the div(lam vt) source in the incremental
     adjoint (5c) and (ii) the lam grad(rho~) term in b~.  Costs one stored
-    rho~(t) series, one batched spectral divergence series, and one batched
-    gradient series more than the GN matvec.  Near the solution (lam -> 0)
-    it coincides with GN (tested); away from it the data block may be
-    indefinite, which is exactly why the paper defaults to GN (§IV-A3).
+    rho~(t) series plus ONE extra coalesced ride pair (the batched
+    ``div(lam vt)`` series and the batched ``grad rho~(t)`` series share
+    it).  Near the solution (lam -> 0) it coincides with GN (tested); away
+    from it the data block may be indefinite, which is exactly why the
+    paper defaults to GN (§IV-A3).
     """
     rho_t_series = semilag.transport_inc_state_series(
         vtilde, state.grad_rho_series, state.plan, interp
     )
+    # div(lam(t_k) vt) for all k and grad rho~(t_k) for all k are mutually
+    # independent diagonal ops: one coalesced ride pair for both series
+    lam_vt = state.lam_series[:, None] * vtilde[None]  # (n_t+1, 3, N..)
+    with ops.batch() as sb:
+        h_div = sb.div(lam_vt)  # (n_t+1, N..)
+        h_grad = sb.grad(rho_t_series)  # (3, n_t+1, N..)
     lamt_series = semilag.transport_inc_adjoint_newton(
-        -rho_t_series[-1], state.lam_series, vtilde, state.plan, ops, interp
+        -rho_t_series[-1], state.lam_series, vtilde, state.plan, ops, interp,
+        div_lam_vt=h_div.get(),
     )
     bt = semilag.time_integral_b(lamt_series, state.grad_rho_series, state.plan.dt)
     # second term of b~: int lam(t) grad rho~(t) dt
-    grad_rho_t = jnp.swapaxes(ops.grad(rho_t_series), 0, 1)  # (n_t+1, 3, N..)
+    grad_rho_t = jnp.swapaxes(h_grad.get(), 0, 1)  # (n_t+1, 3, N..)
     bt = bt + semilag.time_integral_b(state.lam_series, grad_rho_t, state.plan.dt)
-    return ops.reg_apply(vtilde, prob.beta) + _project(ops, bt, prob.incompressible)
+    if prob.incompressible:
+        return ops.reg_plus_project(vtilde, bt, prob.beta, True)
+    return ops.reg_apply(vtilde, prob.beta) + bt

@@ -76,6 +76,7 @@ def make_plan(
     incompressible: bool,
     interp=None,
     adjoint: bool = True,
+    divv: jnp.ndarray | None = None,
 ) -> SLPlan:
     """Build the per-Newton-iteration plan (one departure solve per sign,
     one precomputed ``InterpPlan`` per departure field).
@@ -83,11 +84,20 @@ def make_plan(
     ``adjoint=False`` builds a forward-only plan (``disp_adj``/``iplan_adj``
     left ``None``) — what a pure objective evaluation needs; the Armijo line
     search probes many trial velocities and never transports backward.
+
+    ``divv`` optionally supplies a precomputed ``div v`` so the caller can
+    coalesce its spectral round trip with other transforms
+    (``objective.newton_state`` rides it with the regularization/energy
+    stack through one ``SpectralBatch``); when omitted (and compressible)
+    it costs one dedicated ride pair here.
     """
     dt = 1.0 / n_t
     disp_fwd = departure_displacement(v, grid, dt, interp)
     disp_adj = departure_displacement(-v, grid, dt, interp) if adjoint else None
-    divv = None if incompressible else spectral_ops.div(v)
+    if incompressible:
+        divv = None
+    elif divv is None:
+        divv = spectral_ops.div(v)
     planner = ref.make_interp_plan if interp is None else getattr(interp, "make_plan", None)
     iplan_fwd = planner(disp_fwd) if planner is not None else None
     iplan_adj = planner(disp_adj) if planner is not None and adjoint else None

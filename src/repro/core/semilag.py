@@ -175,18 +175,19 @@ def transport_inc_adjoint_newton(
     plan: SLPlan,
     spectral_ops,
     interp=None,
+    div_lam_vt: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     at_adj = _bind_adj(plan, interp)
     dt = plan.dt
     n_t = plan.n_t
     divv = plan.divv  # None in incompressible mode
 
-    # div(lam(t_k) vt) on the grid, all slices in one batched spectral call
-    lam_vt = lam_series[:, None] * vtilde[None]  # (n_t+1, 3, N..)
-    spec = spectral_ops.fft.fwd(lam_vt)
-    div_lam_vt = sum(
-        spectral_ops.fft.inv(1j * k * spec[:, i]) for i, k in enumerate(spectral_ops.fft.kd)
-    )  # (n_t+1, N..)
+    if div_lam_vt is None:
+        # div(lam(t_k) vt) on the grid, all slices in one batched spectral
+        # call; the full-Newton matvec (objective.full_hessian_matvec)
+        # precomputes this series so it can coalesce the ride with the
+        # grad rho~(t) series instead
+        div_lam_vt = spectral_ops.div(lam_series[:, None] * vtilde[None])  # (n_t+1, N..)
 
     def source(lam_t, k):
         f = div_lam_vt[k]

@@ -16,6 +16,25 @@ FFT expressed with ``shard_map`` + ``lax.all_to_all``; wired up by
 different spectrum layouts (rfft vs full c2c) — operators only ever pair a
 backend's ``fwd``/``inv`` with that same backend's ``k``/``kd``/``ksq``
 grids, so the difference never leaks.
+
+**Transform coalescing** (``SpectralOps.batch()`` / ``SpectralBatch``): on
+the mesh every forward/inverse ride is a latency-bound pair of all-to-all
+transposes, and one Newton iteration used to issue dozens of them — one
+pair per operator call, strictly serialized.  Independent operator calls
+are diagonal in k-space, so they compose into ONE big-batch forward over
+the (deduplicated) stacked inputs and ONE big-batch inverse over the
+stacked outputs:
+
+    with ops.batch() as sb:
+        divv = sb.div(v)          # handles resolve after the ride
+        regv = sb.reg_apply(v, beta)
+        lapv = sb.laplacian(v)
+    g = regv.get() + ...          # all three shared ONE fwd + ONE inv
+
+Inputs are deduplicated by identity (``div v``, ``reg v``, ``lap v`` above
+transform ``v`` once), and both rides go through the backend's packed
+transforms when available — the FFT-side mirror of the plan-once/apply-many
+interpolation batching (EXPERIMENTS §Perf).
 """
 from __future__ import annotations
 
@@ -43,6 +62,9 @@ def mode_indices(n_fine: int, n_coarse: int, rfft: bool = False) -> np.ndarray:
     Returned in coarse-spectrum order, so ``fine_spec[idx]`` IS the coarse
     spectrum (up to normalization) and ``fine_spec[idx] = coarse_spec``
     zero-pads.  ``rfft=True`` addresses an rfft last axis (modes 0..n/2).
+    The index set is two contiguous runs (head of positive modes, tail of
+    negative modes) — ``repro.multilevel.transfer`` exploits that to express
+    truncation/zero-padding as slices+concat instead of gather/scatter.
     """
     if n_coarse > n_fine:
         raise ValueError(f"coarse axis {n_coarse} exceeds fine axis {n_fine}")
@@ -83,6 +105,170 @@ class LocalFFT:
         return jnp.fft.irfftn(spec, s=n, axes=(-3, -2, -1)).astype(self.grid.dtype)
 
 
+class SpectralRef:
+    """Lazy handle for one coalesced op's output (see ``SpectralBatch``)."""
+
+    __slots__ = ("_batch", "_idx")
+
+    def __init__(self, batch: "SpectralBatch", idx: int):
+        self._batch = batch
+        self._idx = idx
+
+    def get(self) -> jnp.ndarray:
+        """Resolve the result (runs the batch's single ride pair if needed)."""
+        self._batch.run()
+        return self._batch._results[self._idx]
+
+
+class SpectralBatch:
+    """Coalesce independent spectral operator calls into ONE forward and ONE
+    inverse transform ride.
+
+    Each enqueued op records (input fields, a k-space transfer function,
+    output layout); ``run()`` — triggered by the context-manager exit or the
+    first ``SpectralRef.get()`` — concatenates the deduplicated inputs,
+    performs one batched real forward (packed on ``PencilFFT``), applies
+    every op's diagonal k-space math, and inverts the stacked real-destined
+    outputs in one batched ride.  On a pencil mesh this turns K serialized
+    all-to-all pairs into 1 per direction; locally it amortizes rfft plan
+    overhead across the stack.  Results are exactly the packed-transform
+    composition of the eager operators (parity pinned in
+    ``tests/test_spectral.py`` / the mesh legs of ``tests/test_coalesce.py``).
+    """
+
+    def __init__(self, ops: "SpectralOps"):
+        self.ops = ops
+        self._in_arrays: list = []  # flat (m, N1, N2, N3) blocks
+        self._in_slots: dict = {}  # id(array) -> (start, array)
+        self._n_in = 0
+        self._jobs: list = []  # (in_slices, kfn, out_lead)
+        self._results: list | None = None
+
+    # -- plumbing ----------------------------------------------------------
+    def _input(self, u: jnp.ndarray):
+        """Register a real input field; dedup by identity. Returns (start, lead)."""
+        if self._results is not None:
+            raise RuntimeError("SpectralBatch already ran; start a new batch")
+        space = u.shape[-3:]
+        if space != tuple(self.ops.grid.shape):
+            raise ValueError(f"field shape {u.shape} not on grid {self.ops.grid.shape}")
+        lead = u.shape[:-3]
+        slot = self._in_slots.get(id(u))
+        if slot is not None and slot[1] is u:
+            return slot[0], lead
+        m = int(np.prod(lead)) if lead else 1
+        start = self._n_in
+        self._in_arrays.append(u.reshape((m,) + space))
+        self._n_in += m
+        self._in_slots[id(u)] = (start, u)
+        return start, lead
+
+    def _job(self, inputs, kfn, out_lead) -> SpectralRef:
+        """Enqueue one op: ``kfn(*specs) -> out_lead + kshape`` spectrum."""
+        slots = [self._input(u) for u in inputs]
+        self._jobs.append((slots, kfn, tuple(out_lead)))
+        return SpectralRef(self, len(self._jobs) - 1)
+
+    def run(self) -> None:
+        """Execute the coalesced ride pair (idempotent)."""
+        if self._results is not None:
+            return
+        self._results = []
+        if not self._jobs:
+            return
+        ins = (
+            self._in_arrays[0]
+            if len(self._in_arrays) == 1
+            else jnp.concatenate(self._in_arrays, axis=0)
+        )
+        specs = self.ops.fwd_real(ins)  # (B_in,) + kshape, one packed ride
+        kshape = specs.shape[1:]
+        out_blocks, out_leads = [], []
+        for slots, kfn, out_lead in self._jobs:
+            args = [
+                specs[start : start + max(int(np.prod(lead)), 1)].reshape(lead + kshape)
+                for start, lead in slots
+            ]
+            out = kfn(*args)
+            out_blocks.append(out.reshape((-1,) + kshape))
+            out_leads.append(out_lead)
+        allspec = (
+            out_blocks[0] if len(out_blocks) == 1 else jnp.concatenate(out_blocks, axis=0)
+        )
+        real = self.ops.inv_real(allspec)  # one packed ride
+        pos = 0
+        for out_lead in out_leads:
+            m = int(np.prod(out_lead)) if out_lead else 1
+            self._results.append(real[pos : pos + m].reshape(out_lead + real.shape[1:]))
+            pos += m
+        # drop input/job references: in eager use a retained handle must not
+        # pin the stacked input buffers (the results are already extracted)
+        self._in_arrays.clear()
+        self._in_slots.clear()
+        self._jobs.clear()
+
+    def __enter__(self) -> "SpectralBatch":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.run()
+
+    # -- coalesced operators (same semantics as the eager SpectralOps) -----
+    def grad(self, f: jnp.ndarray) -> SpectralRef:
+        return self._job([f], self.ops._grad_spec, (3,) + f.shape[:-3])
+
+    def div(self, v: jnp.ndarray) -> SpectralRef:
+        return self._job([v], self.ops._div_spec, v.shape[:-4])
+
+    def laplacian(self, f: jnp.ndarray) -> SpectralRef:
+        return self._job([f], lambda s: -self.ops.fft.ksq * s, f.shape[:-3])
+
+    def biharmonic(self, f: jnp.ndarray) -> SpectralRef:
+        return self._job([f], lambda s: self.ops.fft.ksq**2 * s, f.shape[:-3])
+
+    def inv_laplacian(self, f: jnp.ndarray) -> SpectralRef:
+        return self._job([f], lambda s: self.ops._inv_lap_scale() * s, f.shape[:-3])
+
+    def inv_biharmonic(self, f: jnp.ndarray, zero_mode: float = 0.0) -> SpectralRef:
+        return self._job(
+            [f], lambda s: self.ops._inv_bihar_scale(zero_mode) * s, f.shape[:-3]
+        )
+
+    def reg_apply(self, v: jnp.ndarray, beta) -> SpectralRef:
+        return self._job([v], lambda s: self.ops._reg_scale(beta) * s, v.shape[:-3])
+
+    def precond_apply(self, r: jnp.ndarray, beta) -> SpectralRef:
+        return self._job([r], lambda s: self.ops._precond_scale(beta) * s, r.shape[:-3])
+
+    def leray(self, v: jnp.ndarray) -> SpectralRef:
+        return self._job([v], self.ops._leray_spec, (3,))
+
+    def precond_project(self, r: jnp.ndarray, beta, incompressible: bool) -> SpectralRef:
+        def kfn(s):
+            s = self.ops._precond_scale(beta) * s
+            return self.ops._leray_spec(s) if incompressible else s
+
+        return self._job([r], kfn, (3,))
+
+    def reg_plus_project(
+        self, a: jnp.ndarray, b: jnp.ndarray, beta, incompressible: bool
+    ) -> SpectralRef:
+        """beta Lap^2 a + P b (P = I when not incompressible): the Newton
+        gradient/Hessian assembly, 6 fields forward -> 3 back."""
+
+        def kfn(sa, sb):
+            if incompressible:
+                sb = self.ops._leray_spec(sb)
+            return self.ops._reg_scale(beta) * sa + sb
+
+        return self._job([a, b], kfn, (3,))
+
+    def smooth(self, f: jnp.ndarray, sigma=None) -> SpectralRef:
+        scale = self.ops._smooth_scale(sigma)
+        return self._job([f], lambda s: scale * s, f.shape[:-3])
+
+
 class SpectralOps:
     """Paper's spectral operator toolbox over a pluggable FFT backend."""
 
@@ -90,7 +276,11 @@ class SpectralOps:
         self.grid = grid
         self.fft = backend if backend is not None else LocalFFT(grid)
 
-    def _inv_real(self, spec: jnp.ndarray) -> jnp.ndarray:
+    def batch(self) -> SpectralBatch:
+        """Open a transform-coalescing batch (see ``SpectralBatch``)."""
+        return SpectralBatch(self)
+
+    def inv_real(self, spec: jnp.ndarray) -> jnp.ndarray:
         """Inverse transform of real-destined spectra; uses the backend's
         complex-packed inverse (PencilFFT(packed=True)) when available —
         halves inverse-side all-to-all bytes (EXPERIMENTS §Perf)."""
@@ -101,17 +291,71 @@ class SpectralOps:
             return out.reshape(lead + out.shape[-3:])
         return self.fft.inv(spec)
 
-    def _fwd_real(self, u: jnp.ndarray) -> jnp.ndarray:
+    def fwd_real(self, u: jnp.ndarray) -> jnp.ndarray:
         """Forward transform of REAL fields; pairs of a batched stack ride
         the backend's packed forward (``PencilFFT.fwd_packed``) when
-        available — the forward-side mirror of ``_inv_real``, halving the
-        forward all-to-all bytes of gradient/Leray/fused-elliptic stacks."""
+        available — the forward-side mirror of ``inv_real``, halving the
+        forward all-to-all bytes of gradient/Leray/coalesced-batch stacks."""
         if getattr(self.fft, "packed", False) and u.ndim > 3:
             lead = u.shape[:-3]
             flat = u.reshape((-1,) + u.shape[-3:])
             out = self.fft.fwd_packed(flat)
             return out.reshape(lead + out.shape[-3:])
         return self.fft.fwd(u)
+
+    # backwards-compatible aliases (pre-coalescing internal names)
+    _inv_real = inv_real
+    _fwd_real = fwd_real
+
+    # ------------------------------------------------------------------ #
+    # k-space transfer functions, shared by the eager operators below and
+    # the coalesced SpectralBatch ops above.  Underscored but package-
+    # internal shared API: the multilevel layers compose with them too
+    # (precond.py applies _leray_spec/_precond_scale as k-space multipliers
+    # inside the V-cycle's spectrum-level split, transfer.smooth_restrict
+    # rides _smooth_scale on its own forward) — change signatures here and
+    # grep repro/multilevel along with this file.
+    # ------------------------------------------------------------------ #
+    def _grad_spec(self, spec: jnp.ndarray) -> jnp.ndarray:
+        """(...,) spectrum -> (3, ...) gradient spectrum (Nyquist-zeroed)."""
+        return jnp.stack([1j * k * spec for k in self.fft.kd], axis=0)
+
+    def _div_spec(self, spec: jnp.ndarray) -> jnp.ndarray:
+        """(..., 3, k-shape) spectrum -> (..., k-shape) divergence spectrum."""
+        return sum(1j * k * spec[..., i, :, :, :] for i, k in enumerate(self.fft.kd))
+
+    def _leray_spec(self, spec: jnp.ndarray) -> jnp.ndarray:
+        """Apply P = I - k k^T/|k|^2 in k-space to a (3, ...) spectrum."""
+        kd = self.fft.kd
+        ksq = self.fft.ksq_d
+        kdotv = sum(k * spec[i] for i, k in enumerate(kd))
+        inv = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq, 1e-30), 0.0)
+        return jnp.stack([spec[i] - kd[i] * inv * kdotv for i in range(3)], axis=0)
+
+    def _inv_lap_scale(self) -> jnp.ndarray:
+        ksq = self.fft.ksq
+        return jnp.where(ksq > 0, -1.0 / jnp.maximum(ksq, 1e-30), 0.0)
+
+    def _inv_bihar_scale(self, zero_mode: float) -> jnp.ndarray:
+        ksq = self.fft.ksq
+        return jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq**2, 1e-30), zero_mode)
+
+    def _reg_scale(self, beta) -> jnp.ndarray:
+        """Diagonal of A = beta Lap^2."""
+        return beta * self.fft.ksq**2
+
+    def _precond_scale(self, beta) -> jnp.ndarray:
+        ksq = self.fft.ksq
+        return jnp.where(ksq > 0, 1.0 / jnp.maximum(beta * ksq**2, 1e-30), 1.0)
+
+    def _smooth_scale(self, sigma=None) -> jnp.ndarray:
+        if sigma is None:
+            sigma = self.grid.spacing
+        if np.isscalar(sigma):
+            sigma = (sigma, sigma, sigma)
+        k1, k2, k3 = self.fft.k
+        expo = -0.5 * ((k1 * sigma[0]) ** 2 + (k2 * sigma[1]) ** 2 + (k3 * sigma[2]) ** 2)
+        return jnp.exp(expo)
 
     # ------------------------------------------------------------------ #
     # first-order operators (Nyquist-zeroed wavenumbers, skew-adjoint)
@@ -122,34 +366,28 @@ class SpectralOps:
         One forward FFT, three diagonal scalings, a *batched* inverse FFT —
         the paper's §III-C1 optimization to avoid three full 3-D round trips.
         """
-        spec = self._fwd_real(f)
-        stacked = jnp.stack([1j * k * spec for k in self.fft.kd], axis=0)
-        return self._inv_real(stacked)
+        return self.inv_real(self._grad_spec(self.fwd_real(f)))
 
     def div(self, v: jnp.ndarray) -> jnp.ndarray:
-        """div v: (3, N1,N2,N3) -> (N1,N2,N3)."""
-        spec = self._fwd_real(v)  # batched over the component axis
-        out = sum(1j * k * spec[i] for i, k in enumerate(self.fft.kd))
-        return self.fft.inv(out)
+        """div v: (..., 3, N1,N2,N3) -> (..., N1,N2,N3) (leading dims batch)."""
+        spec = self.fwd_real(v)  # batched over the component axis
+        return self.fft.inv(self._div_spec(spec))
 
     # ------------------------------------------------------------------ #
     # even-order elliptic operators (full wavenumbers)
     # ------------------------------------------------------------------ #
     def laplacian(self, f: jnp.ndarray) -> jnp.ndarray:
-        return self.fft.inv(-self.fft.ksq * self._fwd_real(f))
+        return self.fft.inv(-self.fft.ksq * self.fwd_real(f))
 
     def biharmonic(self, f: jnp.ndarray) -> jnp.ndarray:
-        return self.fft.inv(self.fft.ksq**2 * self._fwd_real(f))
+        return self.fft.inv(self.fft.ksq**2 * self.fwd_real(f))
 
     def inv_laplacian(self, f: jnp.ndarray) -> jnp.ndarray:
         """Lap^{-1} with the zero mean mode mapped to zero."""
-        scale = jnp.where(self.fft.ksq > 0, -1.0 / jnp.maximum(self.fft.ksq, 1e-30), 0.0)
-        return self.fft.inv(scale * self._fwd_real(f))
+        return self.fft.inv(self._inv_lap_scale() * self.fwd_real(f))
 
     def inv_biharmonic(self, f: jnp.ndarray, zero_mode: float = 0.0) -> jnp.ndarray:
-        ksq = self.fft.ksq
-        scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq**2, 1e-30), zero_mode)
-        return self.fft.inv(scale * self._fwd_real(f))
+        return self.fft.inv(self._inv_bihar_scale(zero_mode) * self.fwd_real(f))
 
     # ------------------------------------------------------------------ #
     # Leray projection: P = I - grad Lap^{-1} div  (paper eq. (4))
@@ -163,20 +401,14 @@ class SpectralOps:
         in the discrete spectral sense.  The k=0 (mean-velocity) mode is
         untouched: a constant field is divergence free.
         """
-        spec = self._fwd_real(v)  # (3, ...)
-        kd = self.fft.kd
-        ksq = self.fft.ksq_d
-        kdotv = sum(k * spec[i] for i, k in enumerate(kd))
-        inv = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq, 1e-30), 0.0)
-        proj = jnp.stack([spec[i] - kd[i] * inv * kdotv for i in range(3)], axis=0)
-        return self.fft.inv(proj)
+        return self.fft.inv(self._leray_spec(self.fwd_real(v)))
 
     # ------------------------------------------------------------------ #
     # regularization operator A = beta Lap^2 and spectral preconditioner
     # ------------------------------------------------------------------ #
     def reg_apply(self, v: jnp.ndarray, beta) -> jnp.ndarray:
         """beta * Lap^2 v  (H^2 seminorm regularization, paper eq. (2a))."""
-        return self.fft.inv(beta * self.fft.ksq**2 * self._fwd_real(v))
+        return self.fft.inv(self._reg_scale(beta) * self.fwd_real(v))
 
     def precond_apply(self, r: jnp.ndarray, beta) -> jnp.ndarray:
         """(beta Lap^2)^{-1} r — the paper's spectral preconditioner.
@@ -184,66 +416,48 @@ class SpectralOps:
         Singular at k=0; the mean mode is passed through unchanged (there
         the Hessian is dominated by the data term, which is O(1)).
         """
-        ksq = self.fft.ksq
-        scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(beta * ksq**2, 1e-30), 1.0)
-        return self.fft.inv(scale * self._fwd_real(r))
+        return self.fft.inv(self._precond_scale(beta) * self.fwd_real(r))
 
     # ------------------------------------------------------------------ #
     # fused elliptic ops (beyond-paper; EXPERIMENTS §Perf)
     #
     # The paper applies A = beta Lap^2 and the Leray projection as separate
-    # spectral round trips (12 c2c-equivalent 1-D transform batches per
-    # gradient/Hessian assembly).  Both are diagonal (resp. 3x3-block
-    # diagonal) in k-space, so one batched forward over [a, b], a k-space
-    # combine, and ONE batched inverse computes  beta Lap^2 a + P b  in 9 —
-    # a 25% cut of the elliptic FFT count; the fused preconditioner
-    # P (beta Lap^2)^{-1} halves its round trips (12 -> 6).
+    # spectral round trips.  Both are diagonal (resp. 3x3-block diagonal)
+    # in k-space, so one batched forward over [a, b], a k-space combine,
+    # and ONE batched inverse computes  beta Lap^2 a + P b  — the
+    # single-ride-pair form the coalesced Newton hot path uses
+    # (core/objective.py); the fused preconditioner P (beta Lap^2)^{-1}
+    # likewise halves its round trips.
     # ------------------------------------------------------------------ #
-    def _leray_spec(self, spec):
-        """Apply P in k-space to a (3, ...) spectrum."""
-        kd = self.fft.kd
-        ksq = self.fft.ksq_d
-        kdotv = sum(k * spec[i] for i, k in enumerate(kd))
-        inv = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq, 1e-30), 0.0)
-        return jnp.stack([spec[i] - kd[i] * inv * kdotv for i in range(3)], axis=0)
-
     def reg_plus_project(self, a: jnp.ndarray, b: jnp.ndarray, beta, incompressible: bool):
         """beta Lap^2 a + P b  (P = I when not incompressible) — one batched
         forward over the 6 stacked components, one batched inverse over 3."""
-        spec = self._fwd_real(jnp.stack([a, b], axis=0))  # (2, 3, k...)
+        spec = self.fwd_real(jnp.stack([a, b], axis=0))  # (2, 3, k...)
         sa, sb = spec[0], spec[1]
         if incompressible:
             sb = self._leray_spec(sb)
-        return self._inv_real(beta * self.fft.ksq**2 * sa + sb)
+        return self.inv_real(self._reg_scale(beta) * sa + sb)
 
     def precond_project(self, r: jnp.ndarray, beta, incompressible: bool) -> jnp.ndarray:
         """P (beta Lap^2)^{-1} r in a single spectral round trip."""
-        ksq = self.fft.ksq
-        scale = jnp.where(ksq > 0, 1.0 / jnp.maximum(beta * ksq**2, 1e-30), 1.0)
-        spec = scale * self._fwd_real(r)
+        spec = self._precond_scale(beta) * self.fwd_real(r)
         if incompressible:
             spec = self._leray_spec(spec)
-        return self._inv_real(spec)
+        return self.inv_real(spec)
 
     # ------------------------------------------------------------------ #
     # image preprocessing (paper §III-B1)
     # ------------------------------------------------------------------ #
     def smooth(self, f: jnp.ndarray, sigma=None) -> jnp.ndarray:
         """Gaussian spectral filter; default bandwidth = one grid cell."""
-        if sigma is None:
-            sigma = self.grid.spacing
-        if np.isscalar(sigma):
-            sigma = (sigma, sigma, sigma)
-        k1, k2, k3 = self.fft.k
-        expo = -0.5 * ((k1 * sigma[0]) ** 2 + (k2 * sigma[1]) ** 2 + (k3 * sigma[2]) ** 2)
-        return self.fft.inv(jnp.exp(expo) * self._fwd_real(f))
+        return self.fft.inv(self._smooth_scale(sigma) * self.fwd_real(f))
 
     # ------------------------------------------------------------------ #
     # diagnostics
     # ------------------------------------------------------------------ #
     def reg_energy(self, v: jnp.ndarray, beta) -> jnp.ndarray:
         """beta/2 ||Lap v||^2 via real-space quadrature (mesh independent)."""
-        lap_v = self.fft.inv(-self.fft.ksq * self._fwd_real(v))
+        lap_v = self.fft.inv(-self.fft.ksq * self.fwd_real(v))
         return 0.5 * beta * self.grid.norm_sq(lap_v)
 
     def jacobian_det(self, disp: jnp.ndarray) -> jnp.ndarray:

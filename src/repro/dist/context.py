@@ -40,6 +40,7 @@ class DistContext:
         axes=("data", "model"),
         halo: int = 4,
         packed: bool = True,
+        chunk=None,
         interp_method: str = "auto",
         halo_check: str = "error",
         plan_dtype=None,
@@ -49,10 +50,13 @@ class DistContext:
         self.axes = tuple(axes)
         self.halo = int(halo)
         self.packed = packed
+        # fields per pipelined FFT chunk (None = single ride, "auto" =
+        # per-shard-footprint heuristic) — see repro.dist.pencil_fft
+        self.chunk = chunk
         self.interp_method = interp_method
         self.halo_check = halo_check
         self.plan_dtype = plan_dtype
-        self.fft = PencilFFT(grid, mesh, axes=self.axes, packed=packed)
+        self.fft = PencilFFT(grid, mesh, axes=self.axes, packed=packed, chunk=chunk)
         self.ops = SpectralOps(grid, backend=self.fft)
         # per-shard kernel dispatch (Pallas on TPU / gather oracle) wrapped by
         # the planner's dynamic halo-budget check ("off" disables the check);
@@ -90,6 +94,7 @@ class DistContext:
                 axes=self.axes,
                 halo=self.halo,
                 packed=self.packed,
+                chunk=self.chunk,
                 interp_method=self.interp_method,
                 halo_check=self.halo_check,
                 plan_dtype=self.plan_dtype,

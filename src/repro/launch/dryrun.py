@@ -264,7 +264,7 @@ def lower_lm_cell(
 # --------------------------------------------------------------------------- #
 # registration cells (the paper's own workload)
 # --------------------------------------------------------------------------- #
-def _reg_component_costs(grid, ctx, rcfg, mesh, chips, fused: bool = False):
+def _reg_component_costs(grid, ctx, rcfg, mesh, chips):
     """Per-component roofline via n_t two-point extrapolation.
 
     XLA's cost analysis gives FFTs zero flops and counts scan bodies once,
@@ -288,13 +288,13 @@ def _reg_component_costs(grid, ctx, rcfg, mesh, chips, fused: bool = False):
 
         def grad_eval(v, rho_R, rho_T):
             prob = obj.Problem(rho_R=rho_R, rho_T=rho_T, n_t=n_t, **prob_kw)
-            st = obj.newton_state(v, prob, ctx.ops, ctx.interp, fused=fused)
+            st = obj.newton_state(v, prob, ctx.ops, ctx.interp)
             return st.g
 
         def matvec(vt, v, rho_R, rho_T):
             prob = obj.Problem(rho_R=rho_R, rho_T=rho_T, n_t=n_t, **prob_kw)
-            st = obj.newton_state(v, prob, ctx.ops, ctx.interp, fused=fused)
-            return obj.gn_hessian_matvec(vt, st, prob, ctx.ops, ctx.interp, fused=fused)
+            st = obj.newton_state(v, prob, ctx.ops, ctx.interp)
+            return obj.gn_hessian_matvec(vt, st, prob, ctx.ops, ctx.interp)
 
         cg = jax.jit(grad_eval).lower(vshape, sshape, sshape).compile()
         cm = jax.jit(matvec).lower(vshape, vshape, sshape, sshape).compile()

@@ -240,28 +240,47 @@ def make_vcycle_precond(
             ops = level_ops[l]
 
             def apply(r):
-                z = ops.precond_apply(r, prob_rt.beta)
-                return ops.leray(z) if prob_rt.incompressible else z
+                # one coalesced ride pair: P (beta Lap^2)^{-1}
+                return ops.precond_project(r, prob_rt.beta, prob_rt.incompressible)
 
             return apply
 
         def apply_at(l):
-            """M_l^{-1}: exact spectral split + recursive coarse-block solve."""
+            """M_l^{-1}: exact spectral split + recursive coarse-block solve.
+
+            The split and the correction assembly work on *spectra*
+            (``transfer.restrict_spec`` / ``pad_spec``): one fine forward of
+            ``r``, one coarse inverse for the coarse residual, one coarse
+            forward of the coarse solution, one fine inverse of the combined
+            correction — with the Leray projection and the high-mode
+            spectral inverse applied as k-space multipliers in between.
+            That is 2 fine + 2 coarse transform rides per application where
+            the field-level composition (restrict, prolong, precond_apply,
+            leray as separate round trips) cost 7 fine + 4 coarse — at every
+            level of the recursion.
+            """
             ops_f, ops_c = level_ops[l], level_ops[l - 1]
             inner_pc = spectral(0) if l - 1 == 0 else apply_at(l - 1)
             iters = n_cg_coarse if l - 1 == 0 else n_cg
             mv_c = matvec(l - 1)
 
             def apply(r):
-                r_c = transfer.restrict(r, ops_f, ops_c)
-                # exact spectral split BEFORE any projection of the coarse half
-                r_high = r - transfer.prolong(r_c, ops_c, ops_f)
+                spec = ops_f.fwd_real(r)  # (3, fine-k): the ONE fine forward
+                spec_c = transfer.restrict_spec(spec, ops_f, ops_c)
+                # exact spectral split BEFORE any projection of the coarse
+                # half: low = P R r in the fine layout, r_high = r - low
+                spec_high = spec - transfer.pad_spec(spec_c, ops_c, ops_f)
                 if prob_rt.incompressible:
-                    r_c = ops_c.leray(r_c)
+                    spec_c = ops_c._leray_spec(spec_c)
+                r_c = ops_c.inv_real(spec_c)
                 sol = gn.pcg(mv_c, r_c, inner_pc, ops_c.grid.inner, 0.0, iters)
-                z = transfer.prolong(sol.x, ops_c, ops_f)
-                z = z + ops_f.precond_apply(r_high, prob_rt.beta)
-                return ops_f.leray(z) if prob_rt.incompressible else z
+                # correction: prolonged coarse solve + spectral inverse on
+                # the high-mode complement (+ Leray), combined in k-space
+                zspec = transfer.pad_spec(ops_c.fwd_real(sol.x), ops_c, ops_f)
+                zspec = zspec + ops_f._precond_scale(prob_rt.beta) * spec_high
+                if prob_rt.incompressible:
+                    zspec = ops_f._leray_spec(zspec)
+                return ops_f.inv_real(zspec)  # the ONE fine inverse
 
             return apply
 

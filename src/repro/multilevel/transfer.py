@@ -15,6 +15,24 @@ k-space pencils right after the forward transform and the coarse inverse
 transform re-shards onto the coarse context's mesh layout — no gather of
 the fine field ever materializes.
 
+Because a coarse mode set is two *contiguous* runs per axis (positive
+head, negative tail — see ``spectral.mode_indices``), both directions are
+expressed as slices + concatenation rather than gather/scatter.  That is
+not just cosmetic: GSPMD lowers the slice/concat zero-pad to the sharded
+all-to-all re-distribution on every mesh layout, where the old
+``.at[idx].set`` scatter all-gathered the whole coarse spectrum per chip
+on folded multi-pod pencil axes (74 MB/chip at 256^3 on 2x16x16 —
+EXPERIMENTS §Dry-run; pinned by ``tests/test_coalesce.py``).  The padded
+result additionally carries the backend's k-space sharding hint
+(``PencilFFT.constrain_k``) so the propagation pass cannot fall back to
+replication.
+
+The spectrum-level halves (``restrict_spec`` / ``pad_spec``) are exposed
+for callers that already hold a spectrum: the V-cycle preconditioner
+(``multilevel/precond.py``) splits a residual into coarse + high-mode
+parts and reassembles the correction with ONE fine forward and ONE fine
+inverse per application instead of four.
+
 Normalization: ``restrict`` samples the band-limited interpolant on the
 coarse grid (exact on resolved modes), ``prolong`` is exact band-limited
 interpolation (a grid function round-trips bit-for-bit through
@@ -24,9 +42,9 @@ series) pass straight through both backends.
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
+from jax import lax
 
-from repro.core.spectral import LocalFFT, SpectralOps, mode_indices, nyquist_mask
+from repro.core.spectral import LocalFFT, SpectralOps, nyquist_mask
 
 
 def _layout(ops: SpectralOps) -> bool:
@@ -34,20 +52,99 @@ def _layout(ops: SpectralOps) -> bool:
     return isinstance(ops.fft, LocalFFT)
 
 
-def _plan(fine_ops: SpectralOps, coarse_ops: SpectralOps):
-    """Static per-axis index arrays + combined Nyquist mask (numpy)."""
-    fine, coarse = fine_ops.grid.shape, coarse_ops.grid.shape
+def _check_pair(fine_ops: SpectralOps, coarse_ops: SpectralOps) -> bool:
     if _layout(fine_ops) != _layout(coarse_ops):
         raise ValueError(
             "transfer requires matching spectrum layouts (both LocalFFT or both "
             f"pencil backends); got {type(fine_ops.fft).__name__} -> "
             f"{type(coarse_ops.fft).__name__}"
         )
-    rfft = _layout(fine_ops)
-    idx = [mode_indices(fine[a], coarse[a], rfft=(rfft and a == 2)) for a in range(3)]
+    return _layout(fine_ops)
+
+
+def _mask(fine_ops: SpectralOps, coarse_ops: SpectralOps, rfft: bool) -> jnp.ndarray:
+    fine, coarse = fine_ops.grid.shape, coarse_ops.grid.shape
     m1, m2, m3 = (nyquist_mask(fine[a], coarse[a], rfft=(rfft and a == 2)) for a in range(3))
-    mask = m1[:, None, None] * m2[None, :, None] * m3[None, None, :]
-    return idx, jnp.asarray(mask)
+    return jnp.asarray(m1[:, None, None] * m2[None, :, None] * m3[None, None, :])
+
+
+def _head_tail(n_fine: int, n_coarse: int, rfft: bool) -> tuple[int, int]:
+    """Lengths of the two contiguous mode runs of a coarse axis inside a
+    fine axis (positive head, negative tail; tail = 0 for rfft axes)."""
+    if rfft:
+        return n_coarse // 2 + 1, 0
+    return n_coarse - n_coarse // 2, n_coarse // 2
+
+
+def _zero_pad(x, axis: int, lo: int, hi: int):
+    """lax.pad with zeros on one axis — the one spectrum-surgery primitive
+    the SPMD partitioner handles shard-locally (a concatenate or scatter
+    along a sharded dimension makes GSPMD replicate the operand first:
+    the all-gather/all-reduce pathologies this module exists to avoid)."""
+    cfg = [(0, 0, 0)] * x.ndim
+    cfg[axis % x.ndim] = (lo, hi, 0)
+    return lax.pad(x, jnp.zeros((), x.dtype), cfg)
+
+
+def _truncate_axis(spec, axis: int, n_fine: int, n_coarse: int, rfft: bool):
+    if n_coarse == n_fine:
+        return spec
+    n_pos, n_neg = _head_tail(n_fine, n_coarse, rfft)
+    head = lax.slice_in_dim(spec, 0, n_pos, axis=axis)
+    if n_neg == 0:
+        return head
+    tail = lax.slice_in_dim(spec, n_fine - n_neg, n_fine, axis=axis)
+    # [head | tail] via two shard-local zero-pads + add (no concat)
+    return _zero_pad(head, axis, 0, n_neg) + _zero_pad(tail, axis, n_pos, 0)
+
+
+def _pad_axis(spec, axis: int, n_fine: int, n_coarse: int, rfft: bool):
+    if n_coarse == n_fine:
+        return spec
+    n_pos, n_neg = _head_tail(n_fine, n_coarse, rfft)
+    size_f = n_fine // 2 + 1 if rfft else n_fine
+    head = lax.slice_in_dim(spec, 0, n_pos, axis=axis)
+    out = _zero_pad(head, axis, 0, size_f - n_pos)
+    if n_neg:
+        tail = lax.slice_in_dim(spec, n_pos, n_pos + n_neg, axis=axis)
+        out = out + _zero_pad(tail, axis, size_f - n_neg, 0)
+    return out
+
+
+def restrict_spec(
+    spec: jnp.ndarray, fine_ops: SpectralOps, coarse_ops: SpectralOps
+) -> jnp.ndarray:
+    """Truncate a fine-layout spectrum to the coarse layout (mask + the
+    restriction normalization applied): ``restrict = coarse.inv o this o
+    fine.fwd``."""
+    rfft = _check_pair(fine_ops, coarse_ops)
+    fine, coarse = fine_ops.grid.shape, coarse_ops.grid.shape
+    constrain = getattr(coarse_ops.fft, "constrain_k", lambda s: s)
+    for a, axis in enumerate((-3, -2, -1)):
+        # re-pin the pencil sharding after every axis (each intermediate
+        # keeps both sharded k axes divisible, so the hint is always valid;
+        # without it GSPMD's cost model may replicate small spectra)
+        spec = constrain(_truncate_axis(spec, axis, fine[a], coarse[a], rfft and a == 2))
+    scale = coarse_ops.grid.num_points / fine_ops.grid.num_points
+    return spec * (_mask(fine_ops, coarse_ops, rfft) * scale)
+
+
+def pad_spec(
+    spec: jnp.ndarray, coarse_ops: SpectralOps, fine_ops: SpectralOps
+) -> jnp.ndarray:
+    """Zero-pad a coarse-layout spectrum into the fine layout (mask + the
+    prolongation normalization applied): ``prolong = fine.inv o this o
+    coarse.fwd``.  Slices + ``lax.pad`` + add only (sharded-friendly; see
+    module docstring), with the fine backend's k-space sharding hint
+    re-applied after every axis."""
+    rfft = _check_pair(fine_ops, coarse_ops)
+    fine, coarse = fine_ops.grid.shape, coarse_ops.grid.shape
+    scale = fine_ops.grid.num_points / coarse_ops.grid.num_points
+    spec = spec * (_mask(fine_ops, coarse_ops, rfft) * scale)
+    constrain = getattr(fine_ops.fft, "constrain_k", lambda s: s)
+    for a, axis in enumerate((-3, -2, -1)):
+        spec = constrain(_pad_axis(spec, axis, fine[a], coarse[a], rfft and a == 2))
+    return spec
 
 
 def restrict(f: jnp.ndarray, fine_ops: SpectralOps, coarse_ops: SpectralOps) -> jnp.ndarray:
@@ -55,13 +152,7 @@ def restrict(f: jnp.ndarray, fine_ops: SpectralOps, coarse_ops: SpectralOps) -> 
 
     ``f``: (..., N1, N2, N3) on ``fine_ops.grid``; returns (..., M1, M2, M3).
     """
-    idx, mask = _plan(fine_ops, coarse_ops)
-    spec = fine_ops.fft.fwd(f)
-    spec = jnp.take(spec, idx[0], axis=-3)
-    spec = jnp.take(spec, idx[1], axis=-2)
-    spec = jnp.take(spec, idx[2], axis=-1)
-    scale = coarse_ops.grid.num_points / fine_ops.grid.num_points
-    return coarse_ops.fft.inv(spec * (mask * scale))
+    return coarse_ops.fft.inv(restrict_spec(fine_ops.fft.fwd(f), fine_ops, coarse_ops))
 
 
 def prolong(g: jnp.ndarray, coarse_ops: SpectralOps, fine_ops: SpectralOps) -> jnp.ndarray:
@@ -69,21 +160,7 @@ def prolong(g: jnp.ndarray, coarse_ops: SpectralOps, fine_ops: SpectralOps) -> j
 
     ``g``: (..., M1, M2, M3) on ``coarse_ops.grid``; returns (..., N1, N2, N3).
     """
-    idx, mask = _plan(fine_ops, coarse_ops)
-    spec = coarse_ops.fft.fwd(g)
-    scale = fine_ops.grid.num_points / coarse_ops.grid.num_points
-    spec = spec * (mask * scale)
-    kshape = _kspace_shape(fine_ops)
-    fine_spec = jnp.zeros(spec.shape[:-3] + kshape, spec.dtype)
-    fine_spec = fine_spec.at[
-        ..., idx[0][:, None, None], idx[1][None, :, None], idx[2][None, None, :]
-    ].set(spec)
-    return fine_ops.fft.inv(fine_spec)
-
-
-def _kspace_shape(ops: SpectralOps) -> tuple[int, int, int]:
-    n1, n2, n3 = ops.grid.shape
-    return (n1, n2, n3 // 2 + 1) if _layout(ops) else (n1, n2, n3)
+    return fine_ops.fft.inv(pad_spec(coarse_ops.fft.fwd(g), coarse_ops, fine_ops))
 
 
 def smooth_restrict(
@@ -94,6 +171,9 @@ def smooth_restrict(
     The sharp cutoff alone is alias-free on a spectral grid but rings on
     images with near-Nyquist content; smoothing at one *coarse* cell width
     (the same filter ``register()`` applies at the fine bandwidth) is
-    CLAIRE's coarse-image construction.
+    CLAIRE's coarse-image construction.  One fine ride pair: the Gaussian
+    multiplier rides the restriction's own forward transform.
     """
-    return restrict(fine_ops.smooth(f, sigma=coarse_ops.grid.spacing), fine_ops, coarse_ops)
+    _check_pair(fine_ops, coarse_ops)
+    spec = fine_ops.fft.fwd(f) * fine_ops._smooth_scale(coarse_ops.grid.spacing)
+    return coarse_ops.fft.inv(restrict_spec(spec, fine_ops, coarse_ops))

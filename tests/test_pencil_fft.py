@@ -68,5 +68,24 @@ def test_pencil_fft_properties(mesh_shape):
                 batch = jnp.stack([f + i * g for i in range(b)])
                 err = float(jnp.max(jnp.abs(fft.fwd_packed(batch) - fft.fwd(batch))))
                 assert err < 1e-3, ("fwd_packed", shape, b, err)
+
+            # communication-pipelined (chunked) transforms are EXACTLY the
+            # unchunked programs' results: every chunk setting, odd batch
+            # sizes, and trailing chunk remainders (e.g. chunk=2 at b=5),
+            # on all four entry points
+            batch5 = jnp.stack([f + i * g for i in range(5)])
+            spec5 = fft.fwd(batch5)
+            for chunk in (1, 2, "auto"):
+                cfft = PencilFFT(grid, mesh, chunk=chunk)
+                for b in (1, 3, 5):
+                    u, s = batch5[:b], spec5[:b]
+                    for name, got, want in [
+                        ("fwd", cfft.fwd(u), s),
+                        ("inv", cfft.inv(s), u),
+                        ("fwd_packed", cfft.fwd_packed(u), s),
+                        ("inv_packed", cfft.inv_packed(s), u),
+                    ]:
+                        err = float(jnp.max(jnp.abs(got - want)))
+                        assert err < 1e-3, ("chunk", chunk, name, shape, b, err)
         """
     )

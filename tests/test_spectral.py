@@ -1,4 +1,5 @@
-"""Spectral operator correctness (paper §III-B1)."""
+"""Spectral operator correctness (paper §III-B1) and the transform-
+coalescing SpectralBatch (one forward + one inverse ride per batch)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -110,3 +111,74 @@ def test_jacobian_det_analytic(ops32):
     u = jnp.stack([eps * jnp.sin(x[0]), jnp.zeros(g.shape), jnp.zeros(g.shape)])
     det = ops.jacobian_det(u)
     np.testing.assert_allclose(det, 1.0 + eps * jnp.cos(x[0]), atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# SpectralBatch: coalesced ops == eager ops (ISSUE 5 tentpole, local leg)
+# --------------------------------------------------------------------------- #
+def test_batch_matches_eager_ops(ops32, rng):
+    """Every coalesced op resolves to its eager counterpart."""
+    g, ops = ops32
+    f = jnp.asarray(rng.standard_normal(g.shape), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    series = jnp.asarray(rng.standard_normal((2, 3) + g.shape), jnp.float32)
+    with ops.batch() as sb:
+        handles = {
+            "grad": (sb.grad(f), ops.grad(f)),
+            "div": (sb.div(v), ops.div(v)),
+            "div_series": (sb.div(series), ops.div(series)),
+            "laplacian": (sb.laplacian(f), ops.laplacian(f)),
+            "biharmonic": (sb.biharmonic(f), ops.biharmonic(f)),
+            "inv_laplacian": (sb.inv_laplacian(f), ops.inv_laplacian(f)),
+            "inv_biharmonic": (sb.inv_biharmonic(f), ops.inv_biharmonic(f)),
+            "reg_apply": (sb.reg_apply(v, 1e-2), ops.reg_apply(v, 1e-2)),
+            "precond_apply": (sb.precond_apply(v, 1e-2), ops.precond_apply(v, 1e-2)),
+            "leray": (sb.leray(v), ops.leray(v)),
+            "precond_project": (
+                sb.precond_project(v, 1e-2, True),
+                ops.precond_project(v, 1e-2, True),
+            ),
+            "reg_plus_project": (
+                sb.reg_plus_project(v, w, 1e-2, True),
+                ops.reg_plus_project(v, w, 1e-2, True),
+            ),
+            "smooth": (sb.smooth(f, 0.4), ops.smooth(f, 0.4)),
+        }
+    for name, (h, want) in handles.items():
+        got = h.get()
+        assert got.shape == want.shape, (name, got.shape, want.shape)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 2e-3, (name, err)
+
+
+def test_batch_dedups_inputs_one_ride_pair(ops32, rng):
+    """N ops on the same field share one forward; the whole batch is ONE
+    forward + ONE inverse call on the backend."""
+    g, _ = ops32
+    ops = SpectralOps(g)
+    v = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    calls = {"fwd": [], "inv": []}
+    fwd0, inv0 = ops.fwd_real, ops.inv_real
+    ops.fwd_real = lambda u: (calls["fwd"].append(u.shape), fwd0(u))[1]
+    ops.inv_real = lambda s: (calls["inv"].append(s.shape), inv0(s))[1]
+    with ops.batch() as sb:
+        sb.div(v), sb.reg_apply(v, 1e-2), sb.laplacian(v)
+    assert calls["fwd"] == [(3,) + g.shape], calls  # v transformed ONCE
+    assert len(calls["inv"]) == 1, calls
+    assert calls["inv"][0][0] == 1 + 3 + 3, calls  # div + reg + lap outputs
+
+
+def test_batch_handle_laziness_and_reuse_guard(ops32, rng):
+    g, ops = ops32
+    f = jnp.asarray(rng.standard_normal(g.shape), jnp.float32)
+    sb = ops.batch()
+    h = sb.laplacian(f)
+    # .get() outside a `with` block triggers the ride
+    np.testing.assert_allclose(h.get(), ops.laplacian(f), atol=1e-4)
+    with pytest.raises(RuntimeError):
+        sb.grad(f)  # batch already ran
+    with ops.batch() as sb2:
+        pass  # empty batch is a no-op
+    with pytest.raises(ValueError):
+        ops.batch().laplacian(f[0])  # not a grid-shaped field
