@@ -1,0 +1,153 @@
+"""Cohort-registration suite: solves/second amortization + cost parity.
+
+    PYTHONPATH=src python -m benchmarks.run --suite cohort
+
+Measures ``gn.solve_cohort`` (the subjects axis through the GN solver)
+against S independent ``gn.solve`` runs on the paper's synthetic problem
+at S distinct deformation amplitudes, and a ``launch.reg_serve`` session
+streaming 2S jobs through S slots.  Writes ``BENCH_cohort.json``:
+
+* per-subject ``fine_equiv_matvecs`` (the paper's Table V metric as a
+  per-job billing meter) — pinned EQUAL between cohort and independent
+  solves: batching subjects never changes what any one subject pays;
+* wall-clock per solve (``wall_s_per_subject`` vs ``wall_s_single``) and
+  the compile counts (the cohort's ONE executable vs S independent jit
+  programs);
+* the serve session's cohort-iteration count and per-job billing with
+  mid-flight slot refills.
+
+``BENCH_COHORT_TOY=1`` (used by ``scripts/smoke.sh``) shrinks the problem
+and writes ``results/BENCH_cohort_toy.json`` instead of the committed
+record.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core import gauss_newton as gn
+from repro.data import synthetic
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_cohort.json")
+TOY_OUT = os.path.join(ROOT, "results", "BENCH_cohort_toy.json")
+
+
+def measure(n: int = 24, amps=(0.3, 0.6, 0.9, 1.2), n_t: int = 4,
+            beta: float = 1e-2, gtol: float = 1e-2, max_newton: int = 12,
+            max_cg: int = 50) -> dict:
+    """S-subject cohort vs S independent solves, same tolerance."""
+    import jax.numpy as jnp
+
+    cfg = gn.GNConfig(beta=beta, n_t=n_t, max_newton=max_newton, gtol=gtol,
+                      max_cg=max_cg)
+    probs = [synthetic.synthetic_problem(n, n_t=n_t, amplitude=a) for a in amps]
+    grid = probs[0][3]
+
+    t0 = time.time()
+    singles = [gn.solve(rR, rT, grid, cfg) for rR, rT, _, _ in probs]
+    t_single = time.time() - t0
+
+    rho_R = jnp.stack([p[0] for p in probs])
+    rho_T = jnp.stack([p[1] for p in probs])
+    t0 = time.time()
+    cohort = gn.solve_cohort(rho_R, rho_T, grid, cfg)
+    t_cohort = time.time() - t0
+
+    S = len(amps)
+    rec = {
+        "problem": {"grid": list(grid.shape), "beta": beta, "gtol": gtol,
+                    "n_t": n_t, "amplitudes": list(amps), "subjects": S},
+        "independent": {
+            "newton_iters": [s["newton_iters"] for s in singles],
+            "fine_equiv_matvecs": [float(s["hessian_matvecs"]) for s in singles],
+            "compiled_executables": S,  # one jit program per gn.solve call
+            "wall_s_total": t_single,
+            "wall_s_per_subject": t_single / S,
+        },
+        "cohort": {
+            "newton_iters": cohort["newton_iters"],
+            "fine_equiv_matvecs": cohort["fine_equiv_matvecs"],
+            "compiled_executables": cohort["compiled_executables"],
+            "wall_s_total": t_cohort,
+            "wall_s_per_subject": t_cohort / S,
+        },
+    }
+    # the cost-parity invariant the suite exists to record
+    rec["billing_matches_independent"] = (
+        cohort["fine_equiv_matvecs"]
+        == rec["independent"]["fine_equiv_matvecs"]
+    )
+    return rec
+
+
+def measure_serve(n: int = 24, n_jobs: int = 8, slots: int = 4, n_t: int = 4,
+                  beta: float = 1e-2, gtol: float = 1e-2, max_newton: int = 12,
+                  max_cg: int = 50, seed: int = 0) -> dict:
+    """Stream 2S jobs through an S-slot server (mid-flight refills)."""
+    import numpy as np
+
+    from repro.launch.reg_serve import CohortServer, RegJob
+
+    cfg = gn.GNConfig(beta=beta, n_t=n_t, max_newton=max_newton, gtol=gtol,
+                      max_cg=max_cg)
+    rng = np.random.default_rng(seed)
+    jobs, grid = [], None
+    for j in range(n_jobs):
+        amp = float(rng.uniform(0.3, 1.2))
+        rho_R, rho_T, _, grid = synthetic.synthetic_problem(n, n_t=n_t, amplitude=amp)
+        jobs.append(RegJob(job_id=f"job{j}", rho_R=rho_R, rho_T=rho_T))
+    server = CohortServer(grid, cfg, slots=slots)
+    server.admit(*jobs)
+    t0 = time.time()
+    results = server.run()
+    wall = time.time() - t0
+    return {
+        "jobs": n_jobs,
+        "slots": slots,
+        "cohort_iterations": server.iterations,
+        "compiled_executables": server.compiled_executables(),
+        "all_converged": all(r.converged for r in results),
+        "per_job": [
+            {"job_id": r.job_id, "newton_iters": r.newton_iters,
+             "fine_equiv_matvecs": r.fine_equiv_matvecs,
+             "rel_gnorm": r.rel_gnorm}
+            for r in sorted(results, key=lambda r: r.job_id)
+        ],
+        "wall_s_total": wall,
+        "wall_s_per_job": wall / n_jobs,
+    }
+
+
+def write_record(rec: dict, out: str = DEFAULT_OUT) -> None:
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out + ".tmp", "w") as f:
+        json.dump(rec, f, indent=1)
+    os.replace(out + ".tmp", out)
+
+
+def main(out: str | None = None):
+    toy = bool(os.environ.get("BENCH_COHORT_TOY"))
+    out = out or (TOY_OUT if toy else DEFAULT_OUT)
+    if toy:
+        rec = measure(n=12, amps=(0.4, 1.0), n_t=2, max_newton=5, max_cg=15)
+        rec["serve"] = measure_serve(n=12, n_jobs=3, slots=2, n_t=2,
+                                     max_newton=5, max_cg=15)
+    else:
+        rec = measure()
+        rec["serve"] = measure_serve()
+    write_record(rec, out)
+    ind, coh = rec["independent"], rec["cohort"]
+    emit("cohort/independent", ind["wall_s_per_subject"] * 1e6,
+         f"matvecs={ind['fine_equiv_matvecs']};executables={ind['compiled_executables']}")
+    emit("cohort/cohort", coh["wall_s_per_subject"] * 1e6,
+         f"matvecs={coh['fine_equiv_matvecs']};executables={coh['compiled_executables']}")
+    sv = rec["serve"]
+    emit("cohort/serve", sv["wall_s_per_job"] * 1e6,
+         f"jobs={sv['jobs']};slots={sv['slots']};iterations={sv['cohort_iterations']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    cohort_suite,
     fft_suite,
     interp_suite,
     kernel_microbench,
@@ -33,6 +34,7 @@ TABLES = {
     "fft": fft_suite.main,
     "lm_roofline": lm_roofline.main,
     "multilevel": multilevel_c2f.main,
+    "cohort": cohort_suite.main,
 }
 
 

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI entry point — what a checks job runs on every push.
+#
+#     bash scripts/ci.sh          # fast tier + toy benchmark cells (~10 min)
+#     CI_SLOW=1 bash scripts/ci.sh   # additionally the slow/dist tier
+#
+# The fast gate is scripts/smoke.sh: the `-m "not slow"` test tier (every
+# counted-collective pin, the masked-cohort parity pins, the bugfix
+# regression tests) plus the toy interp/fft/multilevel/cohort benchmark
+# cells — including the S=2 `solve_cohort` billing-parity +
+# one-executable smoke cell — and two tiny end-to-end registrations.
+# The slow tier adds the subprocess multi-device mesh suites (pencil-FFT
+# layouts, halo exchange, mesh-vs-local `register` parity, the S=4
+# cohort collective-count pin).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+bash scripts/smoke.sh
+
+if [[ -n "${CI_SLOW:-}" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q -m slow
+fi
+
+echo "ci PASSED"

@@ -30,6 +30,11 @@ BENCH_FFT_TOY=1 python -m benchmarks.run --suite fft
 # (gitignored) — exercises the merge-aware record writer every run
 BENCH_ML_TOY=1 python -m benchmarks.run --suite multilevel
 
+# toy-size cohort suite: S=2 solve_cohort vs 2 independent solves (billing
+# parity + one-executable invariant) and a 3-job/2-slot serve session —
+# writes results/BENCH_cohort_toy.json (gitignored)
+BENCH_COHORT_TOY=1 python -m benchmarks.run --suite cohort
+
 python - <<'EOF'
 import jax.numpy as jnp
 from repro.core import gauss_newton as gn

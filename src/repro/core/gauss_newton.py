@@ -15,11 +15,13 @@ Python driver loop stays checkpointable.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import objective as obj
 from repro.core.grid import Grid
@@ -45,9 +47,21 @@ class GNConfig:
     plan_dtype: str | None = None
     # DEPRECATED no-op: the transform-coalesced hot path (SpectralBatch +
     # fused k-space assemblies in core/objective.py) is now unconditional
-    # and numerically identical to the old fused=True routing.
+    # and numerically identical to the old fused=True routing.  Setting it
+    # True emits a DeprecationWarning; the field will be removed.
     fused_elliptic: bool = False
     gauss_newton: bool = True  # False: full Newton Hessian (paper eq. (5), all terms)
+
+    def __post_init__(self):
+        if self.fused_elliptic:
+            warnings.warn(
+                "GNConfig.fused_elliptic is deprecated and has no effect: the "
+                "transform-coalesced elliptic assembly (core/objective.py + "
+                "SpectralBatch) is unconditional and numerically identical to "
+                "the old fused=True routing",
+                DeprecationWarning,
+                stacklevel=2,
+            )
 
 
 class PCGResult(NamedTuple):
@@ -103,6 +117,66 @@ def pcg(
     return PCGResult(x=x, iters=it, rel_res=jnp.sqrt(inner(r, r)) / jnp.maximum(bnorm, 1e-30))
 
 
+def pcg_masked(
+    matvec: Callable,
+    b: jnp.ndarray,
+    precond: Callable,
+    inner_per: Callable,
+    rtol: jnp.ndarray,
+    max_iter: int,
+    active: jnp.ndarray,
+) -> PCGResult:
+    """Per-subject masked PCG over a cohort stack ``b (S, 3, N..)``.
+
+    All subjects advance in lockstep through the SAME batched matvec (one
+    set of transform/exchange rides per iteration), but each subject runs
+    its OWN scalar-``pcg`` recursion: ``rtol``/``active`` are per-subject
+    ``(S,)``, a subject whose residual test or iteration cap trips freezes
+    (``x``/``r``/``p``/``rz`` masked in place, zero contribution from then
+    on), and the loop ends when no subject is live.  Live trajectories are
+    identical to independent ``pcg`` runs up to batched-transform roundoff.
+
+    ``iters`` is per-subject ``(S,)`` — the paper's Table V matvec count as
+    a billing meter: a retired (or never-active) subject accrues nothing.
+    """
+
+    def bc(s):  # (S,) -> (S, 1, 1, 1, 1): broadcast over field dims
+        return s.reshape(s.shape + (1,) * (b.ndim - 1))
+
+    bnorm = jnp.sqrt(inner_per(b, b))
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    z0 = precond(r0)
+    rz0 = inner_per(r0, z0)
+    iters0 = jnp.zeros((b.shape[0],), jnp.int32)
+
+    def live(r, iters):
+        return active & (jnp.sqrt(inner_per(r, r)) > rtol * bnorm) & (iters < max_iter)
+
+    def cond(c):
+        x, r, p, rz, iters = c
+        return jnp.any(live(r, iters))
+
+    def body(c):
+        x, r, p, rz, iters = c
+        lv = live(r, iters)
+        hp = matvec(p)
+        php = inner_per(p, hp)
+        alpha = jnp.where(lv, rz / jnp.maximum(php, 1e-30), 0.0)
+        x = x + bc(alpha) * p
+        r = r - bc(alpha) * hp
+        z = precond(r)
+        rz_new = inner_per(r, z)
+        beta_cg = jnp.where(lv, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        p = jnp.where(bc(lv), z + bc(beta_cg) * p, p)
+        rz = jnp.where(lv, rz_new, rz)
+        return (x, r, p, rz, iters + lv.astype(jnp.int32))
+
+    x, r, _, _, iters = jax.lax.while_loop(cond, body, (x0, r0, z0, rz0, iters0))
+    rel = jnp.sqrt(inner_per(r, r)) / jnp.maximum(bnorm, 1e-30)
+    return PCGResult(x=x, iters=iters, rel_res=rel)
+
+
 def _interp_fn(cfg: GNConfig):
     from repro.kernels import ops as kops
 
@@ -114,7 +188,7 @@ def _interp_fn(cfg: GNConfig):
 
 def newton_iteration(
     v: jnp.ndarray,
-    g0_norm: jnp.ndarray,
+    g0_forcing: jnp.ndarray,
     prob: obj.Problem,
     ops: SpectralOps,
     cfg: GNConfig,
@@ -122,6 +196,17 @@ def newton_iteration(
     precond=None,
 ):
     """One globalized inexact Gauss-Newton step.  Returns (v_new, NewtonLog).
+
+    ``g0_forcing`` is the Eisenstat-Walker *forcing* reference only — the
+    denominator in ``eta = min(eta_max, sqrt(gnorm / g0_forcing))``.  It is
+    deliberately decoupled from the convergence reference (``solve``'s
+    ``g0_ref``): a warm-started multilevel stage passes its own first-iterate
+    gradient norm here, so PCG is solved loosely again (eta near eta_max)
+    instead of to the near-machine tolerance that conflating the two
+    references forced (``gnorm/g0_ref`` is already ~gtol on a warm level,
+    driving eta -> sqrt(gtol) * 0 and over-solving every inner system).
+    Pass a tiny sentinel (e.g. ``1e-30``) on the first call of a stage to
+    get ``eta = eta_max`` — the classical cold-start choice.
 
     ``precond`` is an optional factory ``(state, prob) -> (r -> z)``
     replacing the default spectral preconditioner — e.g. the two-level or
@@ -157,7 +242,7 @@ def newton_iteration(
 
     precond = spectral_precond if precond is None else precond(state, prob)
 
-    eta = jnp.minimum(cfg.eta_max, jnp.sqrt(gnorm / jnp.maximum(g0_norm, 1e-30)))
+    eta = jnp.minimum(cfg.eta_max, jnp.sqrt(gnorm / jnp.maximum(g0_forcing, 1e-30)))
     rhs = -state.g
     if prob.incompressible:
         rhs = ops.leray(rhs)
@@ -223,10 +308,15 @@ def solve(
     pass ``ops=ctx.ops, interp=ctx.interp`` from a ``DistContext``.
 
     ``precond`` is the factory forwarded to ``newton_iteration``.  ``g0_ref``
-    overrides the reference gradient norm of the convergence test: the
+    overrides the reference gradient norm of the CONVERGENCE test only: the
     multilevel driver passes the *cold-start* fine-grid norm so a warm-started
     level terminates at the same absolute tolerance a single-level solve
     would, instead of chasing gtol relative to its already-small gradient.
+    The Eisenstat-Walker FORCING reference is decoupled from it (see
+    ``newton_iteration``): each beta stage forces against its own first
+    gradient norm (first call uses a tiny sentinel, i.e. ``eta = eta_max``),
+    so warm stages keep loose inner solves rather than inheriting the tight
+    ``gnorm/g0_ref`` ratio and over-solving PCG.
     """
     ops = ops or SpectralOps(grid)
     v = v0 if v0 is not None else jnp.zeros((3,) + grid.shape, grid.dtype)
@@ -254,16 +344,17 @@ def solve(
                 newton_iteration, prob=prob, ops=ops, cfg=cfg, interp=interp, precond=precond
             )
         )
-        # reference gradient norm at this continuation level
-        if g0_ref is not None:
-            g0 = jnp.float32(g0_ref)
-        else:
-            state0 = jax.jit(partial(obj.newton_state, prob=prob, ops=ops, interp=interp))(v)
-            g0 = jnp.sqrt(grid.norm_sq(state0.g))
-        gnorm = g0
+        # convergence reference: g0_ref if supplied, else this stage's first
+        # gradient norm; forcing reference: ALWAYS the stage's first gradient
+        # norm (sentinel 1e-30 on the first call -> eta = eta_max).
+        g0 = None if g0_ref is None else jnp.float32(g0_ref)
+        g_forcing = None
         for it in range(cfg.max_newton):
-            v, log = step_fn(v, g0)
-            gnorm = log.gnorm
+            v, log = step_fn(v, g_forcing if g_forcing is not None else jnp.float32(1e-30))
+            if g_forcing is None:
+                g_forcing = log.gnorm
+            if g0 is None:
+                g0 = log.gnorm
             total_matvecs += int(log.cg_iters)
             total_newton += 1
             total_precond_fe += (int(log.cg_iters) + 1) * pc_cost
@@ -296,4 +387,260 @@ def solve(
         "newton_iters": total_newton,
         "hessian_matvecs": total_matvecs,
         "precond_fine_equiv_matvecs": total_precond_fe,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cohort-parallel solver: a subjects axis S through the whole GN iteration
+# ---------------------------------------------------------------------------
+
+
+def newton_iteration_cohort(
+    v: jnp.ndarray,
+    g0_forcing: jnp.ndarray,
+    active: jnp.ndarray,
+    prob: obj.Problem,
+    ops: SpectralOps,
+    cfg: GNConfig,
+    interp=None,
+):
+    """One masked Gauss-Newton step for a cohort ``v (S, 3, N..)``.
+
+    Structurally ``newton_iteration`` with every scalar recursion made
+    per-subject ``(S,)``: Eisenstat-Walker forcing, PCG termination
+    (``pcg_masked``), the descent safeguard, and Armijo backtracking all
+    mask on ``active`` so a converged/rejected subject freezes (zero step,
+    velocity unchanged) without perturbing the others — the live subjects'
+    trajectories match independent single solves up to batched-transform
+    roundoff.  All S subjects share every transport/interp/transform ride,
+    which is the whole point: one ghost exchange and one coalesced FFT pair
+    serve the entire cohort (docstring of ``solve_cohort``).
+
+    ``active`` gates cost too: an all-False cohort still traces one program
+    but ``pcg_masked``/line-search loops exit immediately, so retired
+    subjects accrue no Hessian matvecs in the ``(S,)`` ``cg_iters`` meter.
+    """
+    interp = interp or _interp_fn(cfg)
+    grid = prob.grid
+    state = obj.newton_state(v, prob, ops, interp)
+    gnorm = jnp.sqrt(grid.norm_sq_per(state.g))
+
+    def bc(s):  # (S,) -> (S,1,1,1,1)
+        return s.reshape(s.shape + (1,) * (v.ndim - 1))
+
+    def matvec(p):
+        return obj.gn_hessian_matvec(p, state, prob, ops, interp)
+
+    def spectral_precond(r):
+        return ops.precond_project(r, prob.beta, prob.incompressible)
+
+    eta = jnp.minimum(cfg.eta_max, jnp.sqrt(gnorm / jnp.maximum(g0_forcing, 1e-30)))
+    rhs = -state.g
+    if prob.incompressible:
+        rhs = ops.leray(rhs)
+    sol = pcg_masked(matvec, rhs, spectral_precond, grid.inner_per, eta, cfg.max_cg, active)
+    dv = sol.x
+    if prob.incompressible:
+        dv = ops.leray(dv)
+
+    # per-subject steepest-descent safeguard
+    gdv = grid.inner_per(state.g, dv)
+    dv = jnp.where(bc(gdv < 0), dv, -spectral_precond(state.g))
+    gdv = jnp.minimum(gdv, grid.inner_per(state.g, dv))
+
+    def j_of(vv):
+        jval, _ = obj.evaluate_objective(vv, prob, ops, interp)
+        return jval  # (S,)
+
+    # lockstep per-subject Armijo: each halving step shares one objective
+    # evaluation (one forward transport for the whole cohort); subjects that
+    # already satisfy the condition freeze their (alpha, j_new).
+    def ls_cond(c):
+        alpha, jnew, it = c
+        armijo = jnew <= state.j_val + cfg.armijo_c1 * alpha * gdv
+        return jnp.logical_and(jnp.any(active & ~armijo), it < cfg.max_line_search)
+
+    def ls_body(c):
+        alpha, jnew, it = c
+        armijo = jnew <= state.j_val + cfg.armijo_c1 * alpha * gdv
+        halve = active & ~armijo
+        alpha = jnp.where(halve, alpha * 0.5, alpha)
+        jtrial = j_of(v + bc(alpha) * dv)
+        jnew = jnp.where(halve, jtrial, jnew)
+        return (alpha, jnew, it + 1)
+
+    alpha0 = jnp.ones((v.shape[0],), jnp.float32)
+    j1 = j_of(v + bc(alpha0) * dv)
+    alpha, j_new, _ = jax.lax.while_loop(ls_cond, ls_body, (alpha0, j1, jnp.int32(0)))
+    accepted = active & (j_new < state.j_val)
+    v_new = jnp.where(bc(accepted), v + bc(alpha) * dv, v)
+
+    log = NewtonLog(
+        j_val=state.j_val,
+        misfit=state.misfit,
+        reg=state.reg,
+        gnorm=gnorm,
+        cg_iters=sol.iters,
+        step_len=jnp.where(accepted, alpha, 0.0),
+    )
+    return v_new, log
+
+
+def _cohort_step(
+    v: jnp.ndarray,
+    g0_forcing: jnp.ndarray,
+    active: jnp.ndarray,
+    beta: jnp.ndarray,
+    rho_R: jnp.ndarray,
+    rho_T: jnp.ndarray,
+    *,
+    grid: Grid,
+    cfg: GNConfig,
+    ops: SpectralOps,
+    interp,
+):
+    """Jit body for one cohort Newton iteration with EVERYTHING that varies
+    across a serving session traced: ``beta`` (continuation stage), the image
+    stacks (slot refills swap subjects without recompiling), the per-subject
+    forcing references and the active mask.  ``beta`` flows traced through
+    ``Problem`` into the spectral scale factories, which accept traced
+    scalars — so one (grid, mesh, cfg) bucket compiles exactly ONE
+    executable for its whole lifetime (pinned by ``tests/test_cohort.py``).
+    """
+    prob = obj.Problem(
+        grid=grid,
+        rho_R=rho_R,
+        rho_T=rho_T,
+        beta=beta,
+        n_t=cfg.n_t,
+        incompressible=cfg.incompressible,
+    )
+    return newton_iteration_cohort(v, g0_forcing, active, prob, ops, cfg, interp)
+
+
+def make_cohort_step(grid: Grid, cfg: GNConfig, ops: SpectralOps | None = None, interp=None):
+    """Build the shared jitted cohort step for a (grid, mesh, cfg) bucket.
+
+    The returned function has signature
+    ``step_fn(v, g0_forcing, active, beta, rho_R, rho_T)`` and is what
+    ``solve_cohort`` iterates and what ``launch/reg_serve.py`` keeps hot in
+    its executable cache across job admissions.
+    """
+    if not cfg.gauss_newton:
+        raise NotImplementedError(
+            "cohort solves support the Gauss-Newton Hessian only (cfg.gauss_newton=True)"
+        )
+    ops = ops or SpectralOps(grid)
+    interp = interp or _interp_fn(cfg)
+    return jax.jit(partial(_cohort_step, grid=grid, cfg=cfg, ops=ops, interp=interp))
+
+
+def solve_cohort(
+    rho_R: jnp.ndarray,
+    rho_T: jnp.ndarray,
+    grid: Grid,
+    cfg: GNConfig,
+    ops: SpectralOps | None = None,
+    v0: jnp.ndarray | None = None,
+    verbose: bool = False,
+    callback: Callable[[int, dict], None] | None = None,
+    interp=None,
+    g0_ref: float | None = None,
+    active: jnp.ndarray | None = None,
+    step_fn=None,
+):
+    """Register S subjects at once: ``rho_R``/``rho_T`` are ``(S, N..)``.
+
+    The cohort axis amortizes the fixed cost of a distributed solve — the
+    collective latency of each ghost exchange / pencil all-to-all and the
+    per-call dispatch overhead — across S independent registrations that
+    ride the SAME batched kernels (counted-collective pin: an S=4 cohort
+    issues strictly fewer all-to-alls than 4 single solves).  Per-subject
+    masking keeps the numerics faithful: each subject follows its own
+    Eisenstat-Walker forcing, PCG termination, Armijo schedule, and
+    termination test, and a converged subject retires (frozen velocity,
+    zero further matvec cost) while the rest continue.
+
+    ``active`` optionally deactivates subjects from the start (a serving
+    front end admits a partially-filled cohort).  ``step_fn`` optionally
+    supplies a pre-built ``make_cohort_step`` executable so many cohorts
+    share one compilation (the reg_serve bucket cache); its static config
+    must match ``(grid, cfg)``.
+
+    Returns per-subject lists for ``newton_iters``/``hessian_matvecs``/
+    ``fine_equiv_matvecs`` (single-level: fine-equivalent == raw matvecs)
+    and ``compiled_executables`` — the jit cache size of ``step_fn``, which
+    the one-executable acceptance test pins to 1 across a full
+    continuation schedule.
+    """
+    if not cfg.gauss_newton:
+        raise NotImplementedError(
+            "cohort solves support the Gauss-Newton Hessian only (cfg.gauss_newton=True)"
+        )
+    S = rho_R.shape[0]
+    v = v0 if v0 is not None else jnp.zeros((S, 3) + grid.shape, grid.dtype)
+    if step_fn is None:
+        step_fn = make_cohort_step(grid, cfg, ops=ops, interp=interp)
+    active0 = (
+        jnp.ones((S,), bool) if active is None else jnp.asarray(active, bool)
+    )
+
+    betas = tuple(cfg.beta_continuation) + (cfg.beta,)
+    history: list[dict] = []
+    newton_counts = np.zeros(S, np.int64)
+    cg_counts = np.zeros(S, np.int64)
+
+    for beta in betas:
+        stage_act = active0
+        g0 = None if g0_ref is None else jnp.full((S,), g0_ref, jnp.float32)
+        g_forcing = jnp.full((S,), 1e-30, jnp.float32)
+        have_forcing = False
+        for it in range(cfg.max_newton):
+            act_np = np.asarray(stage_act)
+            if not act_np.any():
+                break
+            v, log = step_fn(v, g_forcing, stage_act, jnp.float32(beta), rho_R, rho_T)
+            if not have_forcing:
+                g_forcing = log.gnorm
+                have_forcing = True
+            if g0 is None:
+                g0 = log.gnorm
+            newton_counts += act_np
+            cg_counts += np.asarray(log.cg_iters, np.int64)
+            rel = np.asarray(log.gnorm) / np.maximum(np.asarray(g0), 1e-30)
+            step = np.asarray(log.step_len)
+            done = act_np & ((rel <= cfg.gtol) | (step == 0.0))
+            stage_act = jnp.asarray(act_np & ~done)
+            rec = {
+                "beta": float(beta),
+                "iter": it,
+                "J": [float(x) for x in np.asarray(log.j_val)],
+                "misfit": [float(x) for x in np.asarray(log.misfit)],
+                "reg": [float(x) for x in np.asarray(log.reg)],
+                "gnorm": [float(x) for x in np.asarray(log.gnorm)],
+                "rel_gnorm": [float(x) for x in rel],
+                "cg_iters": [int(x) for x in np.asarray(log.cg_iters)],
+                "step": [float(x) for x in step],
+                "active": [bool(x) for x in act_np],
+            }
+            history.append(rec)
+            if callback:
+                callback(it, rec)
+            if verbose:
+                live = int(act_np.sum())
+                print(
+                    f"[beta={beta:.0e}] it={it:2d} live={live}/{S} "
+                    f"max|g|/|g0|={max(rec['rel_gnorm']):.3e} "
+                    f"cg={rec['cg_iters']}"
+                )
+
+    return {
+        "v": v,
+        "history": history,
+        "newton_iters": [int(x) for x in newton_counts],
+        "hessian_matvecs": [int(x) for x in cg_counts],
+        # single-level cohort: every matvec is a fine-grid matvec
+        "fine_equiv_matvecs": [float(x) for x in cg_counts],
+        "active": [bool(x) for x in np.asarray(active0)],
+        "compiled_executables": int(step_fn._cache_size()),
     }

@@ -91,6 +91,20 @@ class Grid:
     def norm_sq(self, a: jnp.ndarray) -> jnp.ndarray:
         return self.inner(a, a)
 
+    def inner_per(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        """Per-subject inner product over a leading cohort axis.
+
+        ``a``/``b`` are ``(S, ...)`` stacks; reduces every axis but the
+        first, returning ``(S,)`` — the cohort solver's masked PCG and
+        Armijo tests need one scalar per subject.
+        """
+        acc = jnp.promote_types(jnp.result_type(a, b), jnp.float32)
+        prod = (a.astype(acc) * b.astype(acc)).reshape(a.shape[0], -1)
+        return jnp.sum(prod, axis=1) * self.cell_volume
+
+    def norm_sq_per(self, a: jnp.ndarray) -> jnp.ndarray:
+        return self.inner_per(a, a)
+
 
 def make_grid(n, dtype=jnp.float32) -> Grid:
     if isinstance(n, int):

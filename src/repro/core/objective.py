@@ -33,9 +33,16 @@ k-space combine, so the per-stage transform count is minimal:
 * ``full_hessian_matvec`` — the ``div(lam vt)`` series and the
   ``grad rho~(t)`` series share one coalesced ride pair.
 
-The legacy ``fused`` keyword is kept for call-site compatibility but is a
-no-op: the coalesced assembly (identical numerics to ``fused=True``) is
-now unconditional.
+**Cohort axis** (the solves/second lever, ROADMAP item 1): every function
+here is rank-polymorphic over a leading subjects axis ``S``.  A cohort
+``Problem`` carries image stacks ``rho_R``/``rho_T`` of shape ``(S, N..)``
+and a velocity stack ``(S, 3, N..)``; the cached series become
+``rho (n_t+1, S, N..)`` / ``grad rho (n_t+1, S, 3, N..)``, the component
+axis of vector fields always sits at ``-4``, and ``misfit``/``reg``/
+``j_val`` are per-subject ``(S,)``.  All S subjects ride the SAME batched
+interp calls (one ghost exchange per transport step on a mesh) and the
+SAME coalesced transform rides — amortizing the collective-latency cost
+of one solve across the whole cohort (``gn.solve_cohort``).
 """
 from __future__ import annotations
 
@@ -52,15 +59,20 @@ from repro.core.spectral import SpectralOps
 
 class Problem(NamedTuple):
     grid: Grid
-    rho_R: jnp.ndarray
+    rho_R: jnp.ndarray  # (N..) single subject; (S, N..) cohort
     rho_T: jnp.ndarray
-    beta: float
+    beta: float  # may be a traced scalar (the cohort driver's one-program continuation)
     n_t: int
     incompressible: bool
 
 
 class NewtonState(NamedTuple):
-    """Per-Newton-iteration cache shared by gradient and all Hessian matvecs."""
+    """Per-Newton-iteration cache shared by gradient and all Hessian matvecs.
+
+    Cohort problems prepend a subjects axis: ``v (S,3,N..)``, series
+    ``(n_t+1, S, ...)``, ``g (S,3,N..)``, and the scalar diagnostics
+    become per-subject ``(S,)``.
+    """
 
     v: jnp.ndarray
     plan: SLPlan
@@ -77,10 +89,17 @@ def _project(ops: SpectralOps, field: jnp.ndarray, incompressible: bool) -> jnp.
     return ops.leray(field) if incompressible else field
 
 
+def _norm_sq(grid: Grid, x: jnp.ndarray, cohort: bool) -> jnp.ndarray:
+    return grid.norm_sq_per(x) if cohort else grid.norm_sq(x)
+
+
 def evaluate_objective(
     v: jnp.ndarray, prob: Problem, ops: SpectralOps, interp=None, plan: SLPlan | None = None
 ):
-    """J(v) — one forward transport + one spectral regularization energy."""
+    """J(v) — one forward transport + one spectral regularization energy.
+
+    Cohort inputs (``v (S,3,N..)``) return per-subject ``(S,)`` values."""
+    cohort = v.ndim == 5
     if plan is None:
         # forward-only plan: line-search trials never transport backward
         plan = make_plan(
@@ -88,24 +107,23 @@ def evaluate_objective(
         )
     rho_series = semilag.transport_state(prob.rho_T, plan, interp)
     rho1 = rho_series[-1]
-    misfit = 0.5 * prob.grid.norm_sq(rho1 - prob.rho_R)
+    misfit = 0.5 * _norm_sq(prob.grid, rho1 - prob.rho_R, cohort)
     reg = ops.reg_energy(v, prob.beta)
     return misfit + reg, (misfit, reg, rho_series, plan)
 
 
 def newton_state(
-    v: jnp.ndarray, prob: Problem, ops: SpectralOps, interp=None, fused: bool = False
+    v: jnp.ndarray, prob: Problem, ops: SpectralOps, interp=None
 ) -> NewtonState:
     """Forward + adjoint solves, reduced gradient, and the matvec cache.
 
     Spectral stage A (everything that depends only on ``v``: ``div v``,
     ``beta Lap^2 v``, ``Lap v``) rides ONE coalesced transform pair; the
     cached gradient series ``grad rho(t_k)`` is one batched ride over all
-    time slices; in incompressible mode ``P b`` costs one more.  ``fused``
-    is accepted for compatibility and ignored — the coalesced assembly is
-    unconditional (same numerics as the old ``fused=True`` path).
+    time slices; in incompressible mode ``P b`` costs one more.  Cohort
+    inputs (``v (S,3,N..)``) share all of those rides across subjects.
     """
-    del fused  # superseded by transform coalescing (see module docstring)
+    cohort = v.ndim == 5
     # ---- stage A: one ride pair for every v-only spectral op
     with ops.batch() as sb:
         h_divv = None if prob.incompressible else sb.div(v)
@@ -122,8 +140,10 @@ def newton_state(
     lam_series = semilag.transport_adjoint(prob.rho_R - rho1, plan, interp)
 
     # cache grad rho(t_k): ONE batched spectral gradient over all slices
-    # (leading dims pass through both FFT backends; no vmap-of-shard_map)
-    grad_rho_series = jnp.swapaxes(ops.grad(rho_series), 0, 1)  # (n_t+1, 3, N..)
+    # (leading dims pass through both FFT backends; no vmap-of-shard_map);
+    # the component axis lands at -4 in both layouts:
+    # single (n_t+1, 3, N..), cohort (n_t+1, S, 3, N..)
+    grad_rho_series = jnp.moveaxis(ops.grad(rho_series), 0, -4)
 
     b = semilag.time_integral_b(lam_series, grad_rho_series, plan.dt)
     # eq. (4): g = beta Lap^2 v + P b, with lam(1) = rho_R - rho(1);
@@ -131,8 +151,8 @@ def newton_state(
     # (sanity: at v=0, <g,w> = <(rho_R-rho_T) grad rho_T, w> = dJ/deps.)
     g = h_regv.get() + _project(ops, b, prob.incompressible)
 
-    misfit = 0.5 * prob.grid.norm_sq(rho1 - prob.rho_R)
-    reg = 0.5 * prob.beta * prob.grid.norm_sq(h_lapv.get())
+    misfit = 0.5 * _norm_sq(prob.grid, rho1 - prob.rho_R, cohort)
+    reg = 0.5 * prob.beta * _norm_sq(prob.grid, h_lapv.get(), cohort)
     return NewtonState(
         v=v,
         plan=plan,
@@ -152,7 +172,6 @@ def gn_hessian_matvec(
     prob: Problem,
     ops: SpectralOps,
     interp=None,
-    fused: bool = False,
 ) -> jnp.ndarray:
     """Gauss-Newton Hessian action, eq. (5) with the lambda terms dropped.
 
@@ -161,10 +180,9 @@ def gn_hessian_matvec(
     the elliptic assembly in ONE coalesced ride pair:
     ``beta Lap^2 vt + P bt`` forwards ``[vt, bt]`` together and inverts the
     3-component combine (incompressible); compressible mode adds ``bt`` in
-    real space and transforms only ``vt``.  ``fused`` is accepted for
-    compatibility and ignored.
+    real space and transforms only ``vt``.  Cohort states apply S
+    independent Hessians to a ``(S, 3, N..)`` stack in the same rides.
     """
-    del fused
     rho1_t = semilag.transport_inc_state(vtilde, state.grad_rho_series, state.plan, interp)
     lamt_series = semilag.transport_inc_adjoint(-rho1_t, state.plan, interp)
     bt = semilag.time_integral_b(lamt_series, state.grad_rho_series, state.plan.dt)
@@ -186,8 +204,13 @@ def full_hessian_matvec(
     ``div(lam vt)`` series and the batched ``grad rho~(t)`` series share
     it).  Near the solution (lam -> 0) it coincides with GN (tested); away
     from it the data block may be indefinite, which is exactly why the
-    paper defaults to GN (§IV-A3).
+    paper defaults to GN (§IV-A3).  Single-subject only: cohort solves
+    run the Gauss-Newton form (``GNConfig.gauss_newton=True``).
     """
+    if vtilde.ndim == 5:
+        raise NotImplementedError(
+            "full Newton Hessian has no cohort path; use gauss_newton=True"
+        )
     rho_t_series = semilag.transport_inc_state_series(
         vtilde, state.grad_rho_series, state.plan, interp
     )

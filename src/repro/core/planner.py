@@ -35,7 +35,8 @@ from repro.kernels import ref
 class SLPlan(NamedTuple):
     """Everything reusable across transport solves for a fixed velocity."""
 
-    disp_fwd: jnp.ndarray  # (3,N1,N2,N3) departure displacement for +v, grid units
+    disp_fwd: jnp.ndarray  # (3,N..) departure displacement for +v, grid
+    #   units; a cohort plan (velocity (S,3,N..)) carries (S,3,N..)
     disp_adj: jnp.ndarray | None  # same for -v (None in forward-only plans)
     divv: jnp.ndarray | None  # div v on the grid (None in incompressible mode)
     dt: float
@@ -56,12 +57,24 @@ def departure_displacement(v: jnp.ndarray, grid: Grid, dt: float, interp=None) -
     directly.  The three velocity components ride ONE batched interp call
     (single ghost exchange on a mesh; see the batched-field contract in
     ``repro.dist.halo``).
+
+    A cohort velocity ``(S, 3, N..)`` yields per-subject displacements
+    ``(S, 3, N..)``: the interp contract puts the subject axis at ``-4`` of
+    the *fields*, so the component axis is swapped to the channel slot for
+    the one batched self-interpolation and swapped back.
     """
     ct = jnp.promote_types(v.dtype, jnp.float32)
     h = jnp.asarray(grid.spacing, dtype=ct).reshape(3, 1, 1, 1)
     vg = v.astype(ct) / h  # velocity in grid cells / unit time
     d_star = -dt * vg
-    if interp is None:
+    if v.ndim == 5:  # cohort: fields (3, S, N..) against disp (S, 3, N..)
+        fields = jnp.swapaxes(vg, 0, 1)
+        if interp is None:
+            out = kops.tricubic_displace_many(fields, d_star)
+        else:
+            out = interp(fields, d_star)
+        v_star = jnp.swapaxes(out, 0, 1)
+    elif interp is None:
         v_star = kops.tricubic_displace_many(vg, d_star)  # auto kernel dispatch
     else:
         v_star = interp(vg, d_star)

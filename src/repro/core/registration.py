@@ -40,11 +40,35 @@ def register(
     grid: Grid | None = None,
     verbose: bool = False,
     v0: jnp.ndarray | None = None,
+    ops: SpectralOps | None = None,
+    interp=None,
+    ctx=None,
 ):
+    """End-to-end registration.  ``ops``/``interp`` (or a ``DistContext``
+    via ``ctx=``, shorthand for ``ops=ctx.ops, interp=ctx.interp``) select
+    the execution backend for the SOLVE AND THE FINAL DIAGNOSTICS alike:
+    earlier revisions rebuilt a local ``SpectralOps``/default interp for the
+    diagnostics pass, so on a mesh the deformation map/residual were
+    computed by a different (replicated) backend than the solve — wasteful
+    and a silent layout break for sharded inputs (regression-pinned by
+    ``tests/test_dist.py::test_register_on_mesh_matches_local``).
+
+    Diagnostics report BOTH residuals: ``residual_rel`` measures the
+    registration on the RAW input images (what a user of the deformation
+    actually cares about), ``residual_rel_smoothed`` on the presmoothed
+    pair the solver optimized — earlier revisions reported only the
+    smoothed one under the raw name, overstating convergence whenever
+    presmoothing removes significant high-frequency content.  Both
+    transports ride one stacked semi-Lagrangian solve.
+    """
     config = config or RegistrationConfig()
     grid = grid or make_grid(rho_R.shape)
-    ops = SpectralOps(grid)
+    if ctx is not None:
+        ops = ops or ctx.ops
+        interp = interp or ctx.interp
+    ops = ops or SpectralOps(grid)
 
+    rho_R_raw, rho_T_raw = rho_R, rho_T
     if config.presmooth:
         rho_R = ops.smooth(rho_R)
         rho_T = ops.smooth(rho_T)
@@ -53,23 +77,37 @@ def register(
         from repro import multilevel
 
         out = multilevel.solve(
-            rho_R, rho_T, grid, config.multilevel, ops=ops, verbose=verbose, v0=v0
+            rho_R, rho_T, grid, config.multilevel, ops=ops, ctx=ctx, v0=v0,
+            verbose=verbose,
         )
         config = dataclasses.replace(config, solver=config.multilevel.solver)
     else:
-        out = gn.solve(rho_R, rho_T, grid, config.solver, ops=ops, verbose=verbose, v0=v0)
+        out = gn.solve(
+            rho_R, rho_T, grid, config.solver, ops=ops, interp=interp,
+            verbose=verbose, v0=v0,
+        )
     v = out["v"]
 
-    # deformation map + diagnostics
+    # deformation map + diagnostics, on the SAME backend as the solve
     cfg = config.solver
-    plan = make_plan(v, grid, ops, cfg.n_t, cfg.incompressible)
-    u = semilag.deformation_displacement(v, plan)
+    plan = make_plan(v, grid, ops, cfg.n_t, cfg.incompressible, interp)
+    u = semilag.deformation_displacement(v, plan, interp)
     det = ops.jacobian_det(u)
-    rho_series = semilag.transport_state(rho_T, plan)
-    rho1 = rho_series[-1]
+    # raw + smoothed templates share one stacked transport (identical when
+    # presmoothing is off — skip the duplicate channel)
+    if config.presmooth:
+        rho1_pair = semilag.transport_state(
+            jnp.stack([rho_T, rho_T_raw]), plan, interp
+        )[-1]
+        rho1, rho1_raw = rho1_pair[0], rho1_pair[1]
+    else:
+        rho1 = rho1_raw = semilag.transport_state(rho_T, plan, interp)[-1]
 
-    res0 = float(jnp.linalg.norm((rho_T - rho_R).ravel()))
-    res1 = float(jnp.linalg.norm((rho1 - rho_R).ravel()))
+    def rel(r1, r0_img, rT_img):
+        num = float(jnp.linalg.norm((r1 - r0_img).ravel()))
+        den = float(jnp.linalg.norm((rT_img - r0_img).ravel()))
+        return num / max(den, 1e-30)
+
     out.update(
         {
             "displacement": u,
@@ -77,7 +115,8 @@ def register(
             "det_min": float(jnp.min(det)),
             "det_max": float(jnp.max(det)),
             "rho_deformed": rho1,
-            "residual_rel": res1 / max(res0, 1e-30),
+            "residual_rel": rel(rho1_raw, rho_R_raw, rho_T_raw),
+            "residual_rel_smoothed": rel(rho1, rho_R, rho_T),
             "grid": grid,
         }
     )

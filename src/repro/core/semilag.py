@@ -135,11 +135,12 @@ def transport_inc_state(
     """Returns rho~(1) (only the final slice is needed for Gauss-Newton)."""
     at_fwd = _bind_fwd(plan, interp)
     dt = plan.dt
-    rho0 = jnp.zeros_like(grad_rho_series[0, 0])
+    rho0 = jnp.zeros_like(grad_rho_series[0][..., 0, :, :, :])
 
     def source(k):
-        # f(., t_k) = -v~ . grad rho(t_k) on the grid
-        return -jnp.sum(vtilde * grad_rho_series[k], axis=0)
+        # f(., t_k) = -v~ . grad rho(t_k) on the grid; the component axis
+        # sits at -4 for both the single (3,N..) and cohort (S,3,N..) layouts
+        return -jnp.sum(vtilde * grad_rho_series[k], axis=-4)
 
     def step(carry, k):
         rt = carry
@@ -216,10 +217,10 @@ def transport_inc_state_series(
     grad rho~(t_k) for the second b~ term)."""
     at_fwd = _bind_fwd(plan, interp)
     dt = plan.dt
-    rho0 = jnp.zeros_like(grad_rho_series[0, 0])
+    rho0 = jnp.zeros_like(grad_rho_series[0][..., 0, :, :, :])
 
     def source(k):
-        return -jnp.sum(vtilde * grad_rho_series[k], axis=0)
+        return -jnp.sum(vtilde * grad_rho_series[k], axis=-4)
 
     def step(carry, k):
         rt = carry
@@ -236,9 +237,14 @@ def transport_inc_state_series(
 # time quadrature:  b = int_0^1 lam(t) grad rho(t) dt   (trapezoidal)
 # --------------------------------------------------------------------------- #
 def time_integral_b(lam_series: jnp.ndarray, grad_rho_series: jnp.ndarray, dt: float) -> jnp.ndarray:
-    """lam_series (n_t+1, N..), grad_rho_series (n_t+1, 3, N..) -> (3, N..)."""
+    """lam_series (n_t+1, N..), grad_rho_series (n_t+1, 3, N..) -> (3, N..).
+
+    Cohort layouts — lam (n_t+1, S, N..), grad (n_t+1, S, 3, N..) — yield
+    the per-subject stack (S, 3, N..)."""
     n = lam_series.shape[0]
     w = jnp.full((n,), dt, dtype=jnp.float32).at[0].mul(0.5).at[-1].mul(0.5)
+    if lam_series.ndim == 5:  # cohort
+        return jnp.einsum("t,tsxyz,tscxyz->scxyz", w, lam_series, grad_rho_series)
     return jnp.einsum("t,txyz,tcxyz->cxyz", w, lam_series, grad_rho_series)
 
 
@@ -248,8 +254,16 @@ def time_integral_b(lam_series: jnp.ndarray, grad_rho_series: jnp.ndarray, dt: f
 #   d_t u + v.grad u = -v,  u(0) = 0.
 # --------------------------------------------------------------------------- #
 def deformation_displacement(v: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
-    """Returns u(1) (3, N1,N2,N3) in *physical* units; y1 = x + u."""
-    at_fwd = _bind_fwd(plan, interp)
+    """Returns u(1) (3, N1,N2,N3) in *physical* units; y1 = x + u.
+
+    A cohort velocity ``(S, 3, N..)`` returns per-subject displacements of
+    the same shape (the component axis is swapped into the interp channel
+    slot around each batched call)."""
+    at = _bind_fwd(plan, interp)
+    if v.ndim == 5:  # cohort: interp wants the subject axis at -4
+        at_fwd = lambda x: jnp.swapaxes(at(jnp.swapaxes(x, 0, 1)), 0, 1)
+    else:
+        at_fwd = at
     dt = plan.dt
     u0 = jnp.zeros_like(v)
     f = -v

@@ -242,14 +242,14 @@ class SpectralBatch:
         return self._job([r], lambda s: self.ops._precond_scale(beta) * s, r.shape[:-3])
 
     def leray(self, v: jnp.ndarray) -> SpectralRef:
-        return self._job([v], self.ops._leray_spec, (3,))
+        return self._job([v], self.ops._leray_spec, v.shape[:-3])
 
     def precond_project(self, r: jnp.ndarray, beta, incompressible: bool) -> SpectralRef:
         def kfn(s):
             s = self.ops._precond_scale(beta) * s
             return self.ops._leray_spec(s) if incompressible else s
 
-        return self._job([r], kfn, (3,))
+        return self._job([r], kfn, r.shape[:-3])
 
     def reg_plus_project(
         self, a: jnp.ndarray, b: jnp.ndarray, beta, incompressible: bool
@@ -262,7 +262,7 @@ class SpectralBatch:
                 sb = self.ops._leray_spec(sb)
             return self.ops._reg_scale(beta) * sa + sb
 
-        return self._job([a, b], kfn, (3,))
+        return self._job([a, b], kfn, a.shape[:-3])
 
     def smooth(self, f: jnp.ndarray, sigma=None) -> SpectralRef:
         scale = self.ops._smooth_scale(sigma)
@@ -325,12 +325,15 @@ class SpectralOps:
         return sum(1j * k * spec[..., i, :, :, :] for i, k in enumerate(self.fft.kd))
 
     def _leray_spec(self, spec: jnp.ndarray) -> jnp.ndarray:
-        """Apply P = I - k k^T/|k|^2 in k-space to a (3, ...) spectrum."""
+        """Apply P = I - k k^T/|k|^2 in k-space over the ``-4`` component
+        axis of a (..., 3, k-shape) spectrum ((3, ...) single, (S, 3, ...)
+        cohort — leading dims batch)."""
         kd = self.fft.kd
         ksq = self.fft.ksq_d
-        kdotv = sum(k * spec[i] for i, k in enumerate(kd))
+        comp = [spec[..., i, :, :, :] for i in range(3)]
+        kdotv = sum(k * comp[i] for i, k in enumerate(kd))
         inv = jnp.where(ksq > 0, 1.0 / jnp.maximum(ksq, 1e-30), 0.0)
-        return jnp.stack([spec[i] - kd[i] * inv * kdotv for i in range(3)], axis=0)
+        return jnp.stack([comp[i] - kd[i] * inv * kdotv for i in range(3)], axis=-4)
 
     def _inv_lap_scale(self) -> jnp.ndarray:
         ksq = self.fft.ksq
@@ -456,8 +459,13 @@ class SpectralOps:
     # diagnostics
     # ------------------------------------------------------------------ #
     def reg_energy(self, v: jnp.ndarray, beta) -> jnp.ndarray:
-        """beta/2 ||Lap v||^2 via real-space quadrature (mesh independent)."""
+        """beta/2 ||Lap v||^2 via real-space quadrature (mesh independent).
+
+        A cohort velocity ``(S, 3, N..)`` returns per-subject energies
+        ``(S,)`` (one batched transform for the whole cohort)."""
         lap_v = self.fft.inv(-self.fft.ksq * self.fwd_real(v))
+        if v.ndim > 4:
+            return 0.5 * beta * self.grid.norm_sq_per(lap_v)
         return 0.5 * beta * self.grid.norm_sq(lap_v)
 
     def jacobian_det(self, disp: jnp.ndarray) -> jnp.ndarray:

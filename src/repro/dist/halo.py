@@ -30,6 +30,13 @@ operators (elementwise in ``disp`` — sharding-preserving, no collectives)
 and ``apply_plan(fields, plan)`` interpolates against the cached weights,
 so every transport of a Newton iteration skips the per-call weight
 construction.
+
+Cohort contract: per-subject displacements ``(S, 3, N..)`` (or a cohort
+``InterpPlan``) pair with fields carrying the subject axis at ``-4`` —
+``(C, S, N1, N2, N3)``.  The whole (C, S) stack still rides ONE
+ghost-exchange sequence per call, so the per-call collective count is
+independent of the cohort size — the amortization ``gn.solve_cohort``
+is built on (counted-collective pin in ``tests/test_cohort.py``).
 """
 from __future__ import annotations
 
@@ -151,6 +158,28 @@ def _apply_local_many(f, ib, w, *, a1, a2, p1, p2, lo, hi, kernel="ref"):
     return ref.interp_apply_padded(fp, ref.InterpPlan(ib=ib, w=w, halo_need=need), lo)
 
 
+def _interp_local_cohort(f, d, *, a1, a2, p1, p2, lo, hi, kernel="ref"):
+    """Cohort per-device body: ``f`` (C, S, n1l, n2l, n3) against per-subject
+    displacements ``d`` (S, 3, n1l, n2l, n3).
+
+    The ENTIRE (C, S) stack rides the one ghost-exchange sequence — the
+    ppermute count is independent of both the channel count and the cohort
+    size, which is the collective-amortization the cohort solver banks on.
+    The per-shard interpolation is the ``kernels/ref.py`` cohort gather
+    (``interp_apply_padded`` vmaps each subject against its own operators);
+    the Pallas kernel keeps its single-subject scope.
+    """
+    fp = _exchange_ghosts(f, a1=a1, a2=a2, p1=p1, p2=p2, lo=lo, hi=hi)
+    return ref.interp_apply_padded(fp, ref.make_interp_plan(d), lo)
+
+
+def _apply_local_cohort(f, ib, w, *, a1, a2, p1, p2, lo, hi, kernel="ref"):
+    """Planned cohort body: precomputed per-subject operators, one exchange."""
+    fp = _exchange_ghosts(f, a1=a1, a2=a2, p1=p1, p2=p2, lo=lo, hi=hi)
+    need = jnp.zeros((), jnp.float32)  # bound enforced by the checked wrapper
+    return ref.interp_apply_padded(fp, ref.InterpPlan(ib=ib, w=w, halo_need=need), lo)
+
+
 def _resolve_method(method: str) -> str:
     """"auto" -> the Pallas kernel on TPU, the jnp gather elsewhere.
 
@@ -197,13 +226,30 @@ def make_halo_interp(grid: Grid, mesh, axes=("data", "model"), halo: int = 4,
                     out_specs=s_stack, **smkw)
     sm_apply = shard_map(partial(_apply_local_many, **kw), in_specs=(s_stack, s_stack, s_w),
                          out_specs=s_stack, **smkw)
+    # cohort variants: a subjects axis rides between the channel stack and
+    # space — (C, S, n1, n2, n3) fields against (S, 3, n..) displacements /
+    # (S, 3, 4, n..) plan weights, all replicated over the leading dims
+    s_coh = P(None, None, a1, a2, None)
+    s_coh_w = P(None, None, None, a1, a2, None)
+    sm5 = shard_map(partial(_interp_local_cohort, **kw), in_specs=(s_coh, s_coh),
+                    out_specs=s_coh, **smkw)
+    sm_apply5 = shard_map(partial(_apply_local_cohort, **kw), in_specs=(s_coh, s_coh, s_coh_w),
+                          out_specs=s_coh, **smkw)
 
     def interp(field, disp):
+        if disp.ndim == 5:  # cohort: per-subject displacements
+            lead = field.shape[:-4]
+            out = sm5(field.reshape((-1,) + field.shape[-4:]), disp)
+            return out.reshape(lead + out.shape[-4:])
         lead = field.shape[:-3]
         out = sm4(field.reshape((-1,) + field.shape[-3:]), disp)
         return out.reshape(lead + out.shape[-3:])
 
     def apply_plan(fields, plan: ref.InterpPlan):
+        if plan.ib.ndim == 5:  # cohort plan: per-subject operators
+            lead = fields.shape[:-4]
+            out = sm_apply5(fields.reshape((-1,) + fields.shape[-4:]), plan.ib, plan.w)
+            return out.reshape(lead + out.shape[-4:])
         lead = fields.shape[:-3]
         out = sm_apply(fields.reshape((-1,) + fields.shape[-3:]), plan.ib, plan.w)
         return out.reshape(lead + out.shape[-3:])

@@ -92,9 +92,15 @@ def tricubic_displace_many(
     tile: tuple[int, int, int] | None = None,
 ) -> jnp.ndarray:
     """Batched multi-field entry: ``fields`` (..., N1,N2,N3), leading dims
-    are channels sharing one weight construction / one kernel launch."""
+    are channels sharing one weight construction / one kernel launch.
+
+    A cohort displacement ``disp (S, 3, N..)`` pairs subject ``s`` with the
+    ``-4`` axis of ``fields`` (``(..., S, N..)``); the per-subject gathers
+    run on the jnp oracle (the Pallas kernel is single-subject)."""
     shape3 = fields.shape[-3:]
     lead = fields.shape[:-3]
+    if disp.ndim == 5:  # cohort: per-subject departure fields
+        return ref.tricubic_displace_many(fields, disp)
     method, tile = _resolve(method, shape3, tile)
     if method == "ref":
         return ref.tricubic_displace_many(fields, disp)
@@ -139,7 +145,7 @@ class Interp:
     def apply_plan(self, fields: jnp.ndarray, plan: ref.InterpPlan) -> jnp.ndarray:
         shape3 = fields.shape[-3:]
         method, tile = self._resolved(shape3)
-        if method == "ref":
+        if method == "ref" or plan.ib.ndim == 5:  # cohort plans: oracle path
             return ref.interp_apply(fields, plan)
         lead = fields.shape[:-3]
         interpret = jax.default_backend() != "tpu"

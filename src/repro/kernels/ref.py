@@ -122,6 +122,8 @@ class InterpPlan(NamedTuple):
     ``ib``        (3, N1, N2, N3) int32 — ``floor(disp)``: stencil base
                   offset from each point's *home* voxel (layout-agnostic;
                   the home index is integral, so ``floor(x + d) = x + ib``).
+                  A *cohort* plan (per-subject displacements
+                  ``disp (S, 3, N..)``) carries ``ib (S, 3, N..)``.
     ``w``         (3, 4, N1, N2, N3) — separable cubic Lagrange weights at
                   the fractional part ``disp - ib``.  Default dtype is the
                   f32-promoted dtype of ``disp`` (f64 displacements keep
@@ -146,6 +148,10 @@ class InterpPlan(NamedTuple):
 def make_interp_plan(disp: jnp.ndarray, dtype=None) -> InterpPlan:
     """Precompute the tricubic operators for ``disp`` (3, N1, N2, N3).
 
+    A cohort of per-subject displacements ``(S, 3, N1, N2, N3)`` yields a
+    cohort plan (``ib (S,3,N..)``, ``w (S,3,4,N..)``); ``halo_need`` is the
+    max over the cohort (one shared ghost-exchange budget per apply).
+
     By default weights keep the (f32-promoted) dtype of ``disp`` — an f64
     displacement yields f64 weights, so f64 solves lose nothing on the
     planned path.  ``dtype`` overrides the *storage* dtype of ``w`` (pass
@@ -156,7 +162,8 @@ def make_interp_plan(disp: jnp.ndarray, dtype=None) -> InterpPlan:
     """
     d = disp.astype(jnp.promote_types(disp.dtype, jnp.float32))
     ibf = jnp.floor(d)
-    w = jnp.swapaxes(lagrange_weights(d - ibf), 0, 1)  # (3,4,N..)
+    # single (3,N..) -> (3,4,N..); cohort (S,3,N..) -> (S,3,4,N..)
+    w = jnp.moveaxis(lagrange_weights(d - ibf), 0, -4)
     return InterpPlan(
         ib=ibf.astype(jnp.int32),
         w=w if dtype is None else w.astype(dtype),
@@ -232,7 +239,18 @@ def interp_apply(fields: jnp.ndarray, plan: InterpPlan) -> jnp.ndarray:
     Leading dims are batched channels sharing one gather-index computation;
     periodic wrap by index arithmetic (valid for any displacement — also the
     exact global fallback of the distributed checked interp).
+
+    With a *cohort* plan (``ib (S,3,N..)``) the fields carry the subject
+    axis at position -4 — ``(..., S, N1,N2,N3)``, any leading dims batched
+    channels — and each subject's slab is evaluated against its own
+    operators (vmap over S; the per-subject arithmetic is bit-identical to
+    the single-subject oracle).
     """
+    if plan.ib.ndim == 5:  # cohort plan: per-subject operators
+        def one(f, ib, w):
+            return _interp_apply_impl(f, InterpPlan(ib, w, plan.halo_need), lo=None)
+
+        return jax.vmap(one, in_axes=(-4, 0, 0), out_axes=-4)(fields, plan.ib, plan.w)
     return _interp_apply_impl(fields, plan, lo=None)
 
 
@@ -242,7 +260,15 @@ def interp_apply_padded(fpad: jnp.ndarray, plan: InterpPlan, lo: int) -> jnp.nda
 
     ``fpad`` (..., N1+lo+hi, N2+lo+hi, N3+lo+hi) with the block origin at
     padded index ``lo``; ``plan`` holds the *local* (block-shaped) operators.
+    Cohort plans (``ib (S,3,n..)``) pair each subject's operators with the
+    ``-4`` axis of ``fpad`` — the whole ``(C, S, ...)`` stack shares the one
+    ghost exchange the caller already paid.
     """
+    if plan.ib.ndim == 5:  # cohort plan
+        def one(f, ib, w):
+            return _interp_apply_impl(f, InterpPlan(ib, w, plan.halo_need), lo=lo)
+
+        return jax.vmap(one, in_axes=(-4, 0, 0), out_axes=-4)(fpad, plan.ib, plan.w)
     return _interp_apply_impl(fpad, plan, lo=lo)
 
 

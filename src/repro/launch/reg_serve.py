@@ -1,0 +1,249 @@
+"""Cohort registration server: keep one jitted Newton step hot, stream jobs
+through its subject slots.
+
+    PYTHONPATH=src python -m repro.launch.reg_serve --jobs 6 --slots 3 \
+        --size 16 --beta 1e-2 --max-newton 8
+
+The economics (ROADMAP "solves/second" item): on a mesh, one registration
+solve pays a fixed collective-latency bill per Newton iteration (ghost
+exchanges + pencil all-to-alls) that is independent of how many subjects
+ride the batched kernels.  ``gn.solve_cohort`` amortizes that bill across a
+fixed cohort; this driver amortizes it across an UNBOUNDED job stream:
+
+* jobs are bucketed by ``(image shape, GNConfig)`` — each bucket owns ONE
+  ``gn.make_cohort_step`` executable (image stacks, the continuation beta,
+  per-subject forcing references, and the active mask are all traced
+  arguments, so admissions/retirements NEVER recompile; pinned by
+  ``tests/test_cohort.py``);
+* each bucket runs an S-slot cohort: per-subject masked termination retires
+  a converged subject mid-flight and its slot is refilled from the queue on
+  the next iteration, so the executable keeps running near-full cohorts
+  instead of waiting for stragglers;
+* per-subject accounting: every job is billed exactly the Hessian matvecs
+  its own masked PCG consumed (``fine_equiv_matvecs``; a slot's meter is
+  zero while it hosts a retired/free subject), so the cohort batching is
+  cost-transparent per job — the paper's Table V metric, per subject.
+
+Slot refills require every subject in a bucket to share one regularization
+scalar per step (``beta`` is a single traced scalar, not per-subject), so a
+server config must not use ``beta_continuation`` — run continuation as
+separate buckets, coarse-beta bucket feeding the fine-beta bucket's queue.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gauss_newton as gn
+from repro.core.grid import Grid, make_grid
+from repro.core.spectral import SpectralOps
+
+_FORCING_SENTINEL = 1e-30  # first iteration of a subject: eta = eta_max
+
+
+@dataclasses.dataclass
+class RegJob:
+    """One registration request: a reference/template image pair."""
+
+    job_id: Any
+    rho_R: jnp.ndarray  # (N1, N2, N3)
+    rho_T: jnp.ndarray
+
+
+@dataclasses.dataclass
+class JobResult:
+    job_id: Any
+    v: np.ndarray  # (3, N..) converged velocity
+    newton_iters: int
+    hessian_matvecs: int
+    fine_equiv_matvecs: float  # single level: == hessian_matvecs
+    rel_gnorm: float
+    converged: bool  # rel_gnorm <= gtol (False: zero-step/max_newton exit)
+
+
+class CohortServer:
+    """One executable bucket: an S-slot cohort over a fixed (grid, cfg).
+
+    ``step()`` advances every live slot one masked Newton iteration and
+    returns the jobs that retired; ``admit()`` queues jobs; ``run()`` drives
+    the loop until queue and slots drain.  Pass ``ops``/``interp`` from a
+    ``DistContext`` to serve on a mesh.
+    """
+
+    def __init__(self, grid: Grid, cfg: gn.GNConfig, slots: int = 4,
+                 ops: SpectralOps | None = None, interp=None, step_fn=None):
+        if cfg.beta_continuation:
+            raise ValueError(
+                "CohortServer slots share one traced beta per step; run "
+                "beta continuation as chained server buckets instead"
+            )
+        self.grid, self.cfg, self.slots = grid, cfg, slots
+        self.step_fn = step_fn or gn.make_cohort_step(grid, cfg, ops=ops, interp=interp)
+        self.queue: list[RegJob] = []
+        self.results: list[JobResult] = []
+        S = slots
+        self._jobs: list[RegJob | None] = [None] * S
+        self._v = jnp.zeros((S, 3) + grid.shape, grid.dtype)
+        self._rho_R = jnp.zeros((S,) + grid.shape, grid.dtype)
+        self._rho_T = jnp.zeros((S,) + grid.shape, grid.dtype)
+        self._g_forcing = np.full(S, _FORCING_SENTINEL, np.float32)
+        self._g0 = np.zeros(S, np.float32)  # termination reference per slot
+        self._newton = np.zeros(S, np.int64)
+        self._cg = np.zeros(S, np.int64)
+        self._rel = np.zeros(S, np.float32)
+        self.iterations = 0  # cohort step calls (the shared-cost meter)
+
+    def admit(self, *jobs: RegJob) -> None:
+        self.queue.extend(jobs)
+
+    @property
+    def active(self) -> np.ndarray:
+        return np.asarray([j is not None for j in self._jobs])
+
+    def _fill_slots(self) -> None:
+        for s in range(self.slots):
+            if self._jobs[s] is None and self.queue:
+                job = self.queue.pop(0)
+                self._jobs[s] = job
+                self._v = self._v.at[s].set(0.0)
+                self._rho_R = self._rho_R.at[s].set(jnp.asarray(job.rho_R))
+                self._rho_T = self._rho_T.at[s].set(jnp.asarray(job.rho_T))
+                self._g_forcing[s] = _FORCING_SENTINEL
+                self._g0[s] = 0.0
+                self._newton[s] = 0
+                self._cg[s] = 0
+
+    def _retire(self, s: int, converged: bool) -> JobResult:
+        job = self._jobs[s]
+        res = JobResult(
+            job_id=job.job_id,
+            v=np.asarray(self._v[s]),
+            newton_iters=int(self._newton[s]),
+            hessian_matvecs=int(self._cg[s]),
+            fine_equiv_matvecs=float(self._cg[s]),
+            rel_gnorm=float(self._rel[s]),
+            converged=converged,
+        )
+        self._jobs[s] = None
+        self.results.append(res)
+        return res
+
+    def step(self) -> list[JobResult]:
+        """Fill free slots, advance one masked Newton iteration, retire."""
+        self._fill_slots()
+        active = self.active
+        if not active.any():
+            return []
+        self._v, log = self.step_fn(
+            self._v,
+            jnp.asarray(self._g_forcing),
+            jnp.asarray(active),
+            jnp.float32(self.cfg.beta),
+            self._rho_R,
+            self._rho_T,
+        )
+        self.iterations += 1
+        gnorm = np.asarray(log.gnorm, np.float32)
+        step_len = np.asarray(log.step_len)
+        self._newton += active
+        self._cg += np.asarray(log.cg_iters, np.int64)
+        retired = []
+        for s in range(self.slots):
+            if not active[s]:
+                continue
+            # a freshly admitted subject's first iterate fixes BOTH its
+            # Eisenstat-Walker forcing reference and its termination
+            # reference (the decoupling of gn.solve, per slot)
+            if self._g_forcing[s] == _FORCING_SENTINEL:
+                self._g_forcing[s] = gnorm[s]
+                self._g0[s] = gnorm[s]
+            self._rel[s] = gnorm[s] / max(self._g0[s], _FORCING_SENTINEL)
+            converged = self._rel[s] <= self.cfg.gtol
+            if converged or step_len[s] == 0.0 or self._newton[s] >= self.cfg.max_newton:
+                retired.append(self._retire(s, converged))
+        return retired
+
+    def run(self, verbose: bool = False) -> list[JobResult]:
+        while self.queue or self.active.any():
+            retired = self.step()
+            if verbose and retired:
+                for r in retired:
+                    print(
+                        f"  retired job={r.job_id} newton={r.newton_iters} "
+                        f"matvecs={r.hessian_matvecs} |g|/|g0|={r.rel_gnorm:.2e}"
+                        f"{'' if r.converged else ' (not converged)'}"
+                    )
+        return self.results
+
+    def compiled_executables(self) -> int:
+        return int(self.step_fn._cache_size())
+
+
+def serve_jobs(jobs: list[RegJob], cfg: gn.GNConfig, slots: int = 4,
+               ops: SpectralOps | None = None, interp=None,
+               verbose: bool = False) -> dict:
+    """Bucket ``jobs`` by image shape and drain each bucket's server.
+
+    Returns ``{"results": [JobResult...], "buckets": {shape: stats}}`` where
+    each bucket reports its cohort step count and executable count (the
+    one-executable invariant across all admissions).
+    """
+    buckets: dict[tuple, list[RegJob]] = {}
+    for job in jobs:
+        buckets.setdefault(tuple(job.rho_R.shape), []).append(job)
+    results, stats = [], {}
+    for shape, group in buckets.items():
+        server = CohortServer(make_grid(shape), cfg, slots=slots, ops=ops, interp=interp)
+        server.admit(*group)
+        results += server.run(verbose=verbose)
+        stats[shape] = {
+            "jobs": len(group),
+            "cohort_iterations": server.iterations,
+            "compiled_executables": server.compiled_executables(),
+        }
+    return {"results": results, "buckets": stats}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--jobs", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--size", type=int, default=16)
+    ap.add_argument("--beta", type=float, default=1e-2)
+    ap.add_argument("--n-t", type=int, default=4)
+    ap.add_argument("--max-newton", type=int, default=8)
+    ap.add_argument("--max-cg", type=int, default=30)
+    ap.add_argument("--gtol", type=float, default=1e-2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.data.synthetic import synthetic_problem
+
+    cfg = gn.GNConfig(beta=args.beta, n_t=args.n_t, max_newton=args.max_newton,
+                      max_cg=args.max_cg, gtol=args.gtol)
+    rng = np.random.default_rng(args.seed)
+    jobs = []
+    for j in range(args.jobs):
+        amp = float(rng.uniform(0.3, 1.0))
+        rho_R, rho_T, _, _ = synthetic_problem(args.size, n_t=args.n_t, amplitude=amp)
+        jobs.append(RegJob(job_id=f"job{j}(amp={amp:.2f})", rho_R=rho_R, rho_T=rho_T))
+
+    t0 = time.time()
+    out = serve_jobs(jobs, cfg, slots=args.slots, verbose=True)
+    dt = time.time() - t0
+    for shape, st in out["buckets"].items():
+        print(
+            f"bucket {shape}: {st['jobs']} jobs in {st['cohort_iterations']} cohort "
+            f"iterations, {st['compiled_executables']} compiled executable(s)"
+        )
+    total_mv = sum(r.hessian_matvecs for r in out["results"])
+    print(f"served {len(out['results'])} jobs in {dt:.1f}s, {total_mv} matvecs total")
+
+
+if __name__ == "__main__":
+    main()

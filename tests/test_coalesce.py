@@ -26,6 +26,28 @@ from conftest import run_multidevice
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def test_fused_elliptic_flag_deprecated():
+    """The coalesced elliptic assembly is unconditional; the old opt-in flag
+    is a documented no-op that warns (and its dead plumbing — the ``fused=``
+    kwargs of ``core.objective`` — is gone)."""
+    import inspect
+    import warnings
+
+    from repro.core import gauss_newton as gn
+    from repro.core import objective as obj
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        gn.GNConfig(fused_elliptic=True)
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec), rec
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        gn.GNConfig()
+    assert not rec, [str(w.message) for w in rec]
+    for fn in (obj.newton_state, obj.gn_hessian_matvec):
+        assert "fused" not in inspect.signature(fn).parameters
+
+
 # --------------------------------------------------------------------------- #
 # mesh pins (subprocess, 8 placeholder devices)
 # --------------------------------------------------------------------------- #

@@ -140,6 +140,36 @@ def test_distributed_incompressible_gn_matches_local():
     )
 
 
+def test_register_on_mesh_matches_local():
+    """``register(..., ctx=ctx)`` runs the SOLVE AND THE DIAGNOSTICS on the
+    mesh backend (regression: diagnostics used to rebuild a local
+    SpectralOps/default interp regardless of how the solve ran), and the
+    whole result dict is pinned to the local pipeline."""
+    _run(
+        """
+        from repro.core import gauss_newton as gn
+        from repro.core.registration import RegistrationConfig, register
+        from repro.dist.context import DistContext
+        from repro.launch.mesh import make_mesh
+        from repro.data import synthetic
+        rho_R, rho_T, v_star, grid = synthetic.synthetic_problem(16, n_t=2)
+        cfg = RegistrationConfig(
+            solver=gn.GNConfig(beta=1e-2, n_t=2, max_newton=3, gtol=1e-2, max_cg=10))
+        mesh = make_mesh((2, 4), ("data", "model"))
+        ctx = DistContext(grid, mesh, halo=4)
+        out_l = register(rho_R, rho_T, cfg, grid=grid)
+        out_d = register(ctx.shard_scalar(rho_R), ctx.shard_scalar(rho_T), cfg,
+                         grid=grid, ctx=ctx)
+        for key in ("v", "displacement", "det_grad_y", "rho_deformed"):
+            err = float(jnp.max(jnp.abs(out_l[key] - out_d[key])))
+            assert err < 1e-3, (key, err)
+        for key in ("residual_rel", "residual_rel_smoothed", "det_min", "det_max"):
+            assert abs(out_l[key] - out_d[key]) < 1e-3, (key, out_l[key], out_d[key])
+        assert out_l["newton_iters"] == out_d["newton_iters"]
+        """
+    )
+
+
 def test_halo_budget_check():
     """Dynamic halo budget (ROADMAP): an overshooting displacement either
     NaN-poisons (halo_check="error") or falls back to the exact global

@@ -510,3 +510,23 @@ def test_bench_multilevel_record():
         <= low["two_level"]["total_fine_equiv_matvecs"]
     ), low
     assert low["vcycle"]["fine_matvecs"] < 0.5 * low["spectral"]["fine_matvecs"], low
+    # Eisenstat-Walker forcing decoupled from the warm-start convergence
+    # reference (gn.solve): warm levels no longer over-solve PCG, so the
+    # committed hardest row must not regress past the post-fix cost
+    assert low["vcycle"]["total_fine_equiv_matvecs"] <= 30.2, low
+
+
+def test_warm_start_forcing_not_oversolved():
+    """E-W decoupling regression: with a huge convergence reference g0_ref
+    (the warm-multilevel regime — rel gnorm already tiny), the FIRST inner
+    solve must still be loose (eta = eta_max), not driven to max_cg by the
+    old eta = sqrt(gnorm / g0_ref) conflation."""
+    rho_R, rho_T, _, grid = synthetic.synthetic_problem(12, n_t=2)
+    cfg = gn.GNConfig(beta=1e-2, n_t=2, max_newton=1, max_cg=40, gtol=1e-12)
+    cold = gn.solve(rho_R, rho_T, grid, cfg)
+    warm = gn.solve(rho_R, rho_T, grid, cfg, g0_ref=1e6)
+    # forcing is per-stage-local: the absurd g0_ref changes ONLY the
+    # termination test, so the first iteration's PCG work is identical
+    assert warm["history"][0]["cg_iters"] == cold["history"][0]["cg_iters"], (
+        warm["history"][0], cold["history"][0])
+    assert warm["history"][0]["cg_iters"] < cfg.max_cg
