@@ -22,10 +22,10 @@ record.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
+from benchmarks import common
 from benchmarks.common import emit
 from repro.core import gauss_newton as gn
 from repro.data import synthetic
@@ -122,10 +122,7 @@ def measure_serve(n: int = 24, n_jobs: int = 8, slots: int = 4, n_t: int = 4,
 
 
 def write_record(rec: dict, out: str = DEFAULT_OUT) -> None:
-    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-    with open(out + ".tmp", "w") as f:
-        json.dump(rec, f, indent=1)
-    os.replace(out + ".tmp", out)
+    common.write_record(rec, out)
 
 
 def main(out: str | None = None):

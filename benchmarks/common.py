@@ -1,9 +1,13 @@
-"""Shared benchmark utilities: timing, CSV output, derived-model helpers."""
+"""Shared benchmark utilities: timing, CSV/telemetry output, record writer."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+from repro import telemetry
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3):
@@ -22,4 +26,30 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3):
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
+    """One benchmark row: CSV line on stdout (the legacy contract, kept),
+    plus a structured ``bench`` event for any installed telemetry sink."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    telemetry.emit(telemetry.BenchEvent(
+        name=name, us_per_call=float(us_per_call), derived=derived))
+
+
+def write_record(rec: dict, out: str) -> None:
+    """Merge ``rec``'s top-level keys into the JSON record at ``out``.
+
+    The one writer behind every ``BENCH_*.json``: merge-aware (suites that
+    refresh one section at a time — e.g. the C2F table vs the precond
+    sweep — keep the other sections), atomic (tmp + replace, so an
+    interrupted run never truncates a committed record).
+    """
+    merged = {}
+    if os.path.exists(out):
+        try:
+            with open(out) as f:
+                merged = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            merged = {}
+    merged.update(rec)
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out + ".tmp", "w") as f:
+        json.dump(merged, f, indent=1)
+    os.replace(out + ".tmp", out)

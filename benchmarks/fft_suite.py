@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_fn
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -56,7 +57,7 @@ from repro.core.grid import make_grid
 from repro.dist.context import DistContext
 from repro.dist.pencil_fft import PencilFFT
 from repro.launch.mesh import make_mesh
-from repro.analysis.roofline import parse_collective_bytes
+from repro.telemetry import count_collectives
 sys.path.insert(0, {root!r})
 from benchmarks.common import time_fn
 
@@ -71,7 +72,7 @@ def compiled(fn, *args):
     return jax.jit(fn).lower(*args).compile()
 
 def count_a2a(c):
-    return sum(1 for l in c.as_text().splitlines() if "all-to-all" in l and "=" in l)
+    return count_collectives(c)["all-to-all"]["count"]
 
 # ---- GN Hessian matvec: coalesced vs the uncoalesced composition (main) ----
 rho_R = ctx.shard_scalar(jnp.asarray(rng.standard_normal(grid.shape), jnp.float32))
@@ -116,8 +117,8 @@ fft_p = PencilFFT(grid, mesh, packed=True)
 fft_u = PencilFFT(grid, mesh, packed=False)
 fwd_p = compiled(fft_p.fwd_packed, stack)
 fwd_u = compiled(fft_u.fwd, stack)
-bytes_p = parse_collective_bytes(fwd_p.as_text())["all-to-all"]["bytes"]
-bytes_u = parse_collective_bytes(fwd_u.as_text())["all-to-all"]["bytes"]
+bytes_p = count_collectives(fwd_p)["all-to-all"]["bytes"]
+bytes_u = count_collectives(fwd_u)["all-to-all"]["bytes"]
 
 # ---- chunked vs unchunked roundtrip: parity + wall ----
 ref_spec = fft_p.fwd(stack)
@@ -208,10 +209,7 @@ def measure(toy: bool = False) -> dict:
 
 
 def write_record(rec: dict, out: str) -> None:
-    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-    with open(out + ".tmp", "w") as f:
-        json.dump(rec, f, indent=1)
-    os.replace(out + ".tmp", out)
+    common.write_record(rec, out)
 
 
 def main(out: str | None = None):

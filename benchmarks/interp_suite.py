@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_fn
 from repro.kernels import ref
 
@@ -148,10 +149,7 @@ def measure(toy: bool = False) -> dict:
 
 
 def write_record(rec: dict, out: str) -> None:
-    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-    with open(out + ".tmp", "w") as f:
-        json.dump(rec, f, indent=1)
-    os.replace(out + ".tmp", out)
+    common.write_record(rec, out)
 
 
 def main(out: str | None = None):

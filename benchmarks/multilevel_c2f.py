@@ -28,10 +28,10 @@ committed record.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
+from benchmarks import common
 from benchmarks.common import emit
 from repro.core import gauss_newton as gn
 from repro.data import synthetic
@@ -136,18 +136,7 @@ def precond_sweep(n: int = 32, betas=(1e-2, 1e-3, 1e-4), n_levels: int = 3,
 def write_record(rec: dict, out: str = DEFAULT_OUT) -> None:
     """Merge ``rec``'s top-level keys into the existing record (so the C2F
     table and the precond sweep can be refreshed independently)."""
-    merged = {}
-    if os.path.exists(out):
-        try:
-            with open(out) as f:
-                merged = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            merged = {}
-    merged.update(rec)
-    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-    with open(out + ".tmp", "w") as f:
-        json.dump(merged, f, indent=1)
-    os.replace(out + ".tmp", out)
+    common.write_record(rec, out)
 
 
 def main(out: str | None = None):

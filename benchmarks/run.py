@@ -13,6 +13,8 @@ import argparse
 import sys
 import traceback
 
+from repro import telemetry
+
 from benchmarks import (
     cohort_suite,
     fft_suite,
@@ -49,6 +51,8 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown suite(s) {unknown}; choose from {list(TABLES)}")
 
+    # REPRO_TRACE=path.jsonl captures every bench row as telemetry events
+    telemetry.configure_from_env()
     print("name,us_per_call,derived")
     failed = []
     for name in which:

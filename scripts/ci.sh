@@ -4,6 +4,10 @@
 #     bash scripts/ci.sh          # fast tier + toy benchmark cells (~10 min)
 #     CI_SLOW=1 bash scripts/ci.sh   # additionally the slow/dist tier
 #
+# After the smoke gate, every telemetry record the smoke run emitted is
+# validated against the versioned event schema (repro.telemetry.events):
+# a drifted emitter fails CI here, not in a downstream trace consumer.
+#
 # The fast gate is scripts/smoke.sh: the `-m "not slow"` test tier (every
 # counted-collective pin, the masked-cohort parity pins, the bugfix
 # regression tests) plus the toy interp/fft/multilevel/cohort benchmark
@@ -16,6 +20,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 bash scripts/smoke.sh
+
+# schema gate: every event in the smoke trace must validate (non-zero exit
+# on any violation)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.analysis.trace_report --validate results/smoke_trace.jsonl > /dev/null
 
 if [[ -n "${CI_SLOW:-}" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -35,8 +35,14 @@ BENCH_ML_TOY=1 python -m benchmarks.run --suite multilevel
 # writes results/BENCH_cohort_toy.json (gitignored)
 BENCH_COHORT_TOY=1 python -m benchmarks.run --suite cohort
 
+# telemetry trace (ISSUE 7): the 2-level registration below and a toy
+# 6-job/3-slot serve session both write results/smoke_trace.jsonl; the
+# trace_report CLI renders it and ci.sh schema-validates every record
+rm -f results/smoke_trace.jsonl
+
 python - <<'EOF'
 import jax.numpy as jnp
+from repro import telemetry
 from repro.core import gauss_newton as gn
 from repro.core.registration import RegistrationConfig, register
 from repro.data import synthetic
@@ -47,7 +53,8 @@ cfg = RegistrationConfig(multilevel=MultilevelConfig(
     solver=gn.GNConfig(beta=1e-2, n_t=4, max_newton=8, gtol=1e-2, max_cg=30),
     n_levels=2,
 ))
-out = register(rho_R, rho_T, cfg, grid=grid)
+with telemetry.jsonl_sink("results/smoke_trace.jsonl"):
+    out = register(rho_R, rho_T, cfg, grid=grid)
 assert out["history"][-1]["rel_gnorm"] <= 1e-2 + 1e-6, out["history"][-1]
 assert out["det_min"] > 0.0, out["det_min"]
 assert len(out["levels"]) == 2, out["levels"]
@@ -56,6 +63,14 @@ print("smoke 2-level registration OK:",
       f"fine-equiv={out['fine_equiv_matvecs']:.1f}",
       f"residual_rel={out['residual_rel']:.3f}")
 EOF
+
+# toy cohort-serve session appending to the same trace (per-job billing,
+# queue-wait, slot occupancy, and the step program's collective counts)
+python -m repro.launch.reg_serve --jobs 6 --slots 3 --size 12 --n-t 2 \
+    --max-newton 6 --max-cg 15 --trace results/smoke_trace.jsonl
+
+# render the per-phase wall/matvec/collective tables off the live trace
+python -m repro.analysis.trace_report results/smoke_trace.jsonl
 
 # toy 3-level V-cycle cell: the recursive Galerkin preconditioner must beat
 # the spectral preconditioner on fine-grid matvecs in the low-beta regime

@@ -1,0 +1,245 @@
+"""Render a telemetry JSONL trace as per-phase time / matvec / collective
+tables (the paper's Table V shape, from a live run instead of a sweep).
+
+    PYTHONPATH=src python -m repro.analysis.trace_report results/run.jsonl
+    PYTHONPATH=src python -m repro.analysis.trace_report run.jsonl --validate
+    PYTHONPATH=src python -m repro.analysis.trace_report run.jsonl --json
+
+Reads the schema-versioned event stream written by
+``telemetry.jsonl_sink`` (Newton iterations from ``gn.solve`` /
+``solve_cohort``, levels from ``multilevel.solve``, jobs/steps from
+``launch.reg_serve``, spans, counters, collectives) and renders:
+
+* **phases** — Newton work grouped by (level, beta): iterations, CG
+  matvecs, Armijo trials, wall seconds;
+* **levels** — the ladder summary with fine-equivalent matvec billing;
+* **spans** — wall-clock per span path (count / total / mean);
+* **jobs** — per-job billing from the cohort server (matvecs, queue wait,
+  slot occupancy) plus the serve-step occupancy aggregate;
+* **collectives** — per-kind counted collectives of each labelled program;
+* **counters** — final totals (e.g. ``halo_budget_exceeded``).
+
+``--validate`` exits non-zero when any record fails the schema contract
+(``telemetry.validate_record``) — the CI tripwire of ``scripts/ci.sh``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.telemetry.events import validate_record
+
+
+def load(path: str) -> list[dict]:
+    """Parse one JSON record per non-blank line."""
+    recs = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i}: not valid JSON ({e})") from None
+    return recs
+
+
+def _by_kind(recs: list[dict]) -> dict[str, list[dict]]:
+    out: dict[str, list[dict]] = {}
+    for r in recs:
+        out.setdefault(r.get("kind", "?"), []).append(r)
+    return out
+
+
+def summarize(recs: list[dict]) -> dict:
+    """Aggregate a record stream into the report's table-shaped dict."""
+    k = _by_kind(recs)
+
+    phases = {}  # (level, beta) -> aggregate newton work
+    for r in k.get("newton_iter", []):
+        cg = r["cg_iters"]
+        cohort = isinstance(cg, (list, tuple))
+        key = (r.get("level"), r["beta"])
+        p = phases.setdefault(
+            key,
+            {"level": r.get("level"), "beta": r["beta"], "source": r["source"],
+             "iters": 0, "cg_iters": 0, "armijo_trials": 0, "wall_s": 0.0,
+             "subjects": r.get("subjects") or 0},
+        )
+        p["iters"] += 1
+        p["cg_iters"] += sum(cg) if cohort else cg
+        p["armijo_trials"] += r.get("armijo_trials") or 0
+        p["wall_s"] += r.get("wall_s") or 0.0
+
+    spans = {}
+    for r in k.get("span", []):
+        s = spans.setdefault(r["path"] or r["name"], {"count": 0, "total_s": 0.0})
+        s["count"] += 1
+        s["total_s"] += r["wall_s"]
+    for s in spans.values():
+        s["mean_s"] = s["total_s"] / s["count"]
+
+    jobs = [
+        {f: r[f] for f in (
+            "job_id", "slot", "newton_iters", "hessian_matvecs",
+            "fine_equiv_matvecs", "queue_wait_steps", "admitted_step",
+            "retired_step", "rel_gnorm", "converged")}
+        for r in k.get("job", [])
+    ]
+    serve = None
+    steps = k.get("serve_step", [])
+    if steps:
+        serve = {
+            "steps": len(steps),
+            "slots": steps[-1]["slots"],
+            "refills": steps[-1]["refills"],
+            "mean_occupancy": sum(s["occupancy"] for s in steps) / len(steps),
+            "max_queue": max(s["queue_len"] for s in steps),
+        }
+
+    collectives = {r["label"]: r["collectives"] for r in k.get("collectives", [])}
+    counters = {r["name"]: r["total"] for r in k.get("counter", [])}
+
+    return {
+        "n_records": len(recs),
+        "kinds": {kind: len(v) for kind, v in sorted(k.items())},
+        "phases": [phases[key] for key in sorted(phases, key=lambda t: (
+            -1 if t[0] is None else t[0], -t[1]))],
+        "levels": k.get("level", []),
+        "solves": k.get("solve", []),
+        "spans": spans,
+        "jobs": jobs,
+        "serve": serve,
+        "collectives": collectives,
+        "counters": counters,
+        "bench": k.get("bench", []),
+    }
+
+
+def _table(headers: list[str], rows: list[list], title: str) -> str:
+    cells = [[str(c) for c in row] for row in rows]
+    widths = [max(len(h), *(len(r[i]) for r in cells)) if cells else len(h)
+              for i, h in enumerate(headers)]
+    lines = [title, "  " + "  ".join(h.ljust(w) for h, w in zip(headers, widths))]
+    lines.append("  " + "  ".join("-" * w for w in widths))
+    for r in cells:
+        lines.append("  " + "  ".join(c.ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(lines)
+
+
+def _f(x, spec=".3f"):
+    return "-" if x is None else format(x, spec)
+
+
+def render(summary: dict) -> str:
+    out = []
+    kinds = " ".join(f"{k}={n}" for k, n in summary["kinds"].items())
+    out.append(f"{summary['n_records']} records: {kinds}")
+
+    if summary["phases"]:
+        rows = [
+            [("-" if p["level"] is None else p["level"]), f"{p['beta']:.0e}",
+             p["iters"], p["cg_iters"], p["armijo_trials"],
+             _f(p["wall_s"]), p["subjects"] or "-"]
+            for p in summary["phases"]
+        ]
+        out.append(_table(
+            ["level", "beta", "newton", "cg_matvecs", "armijo", "wall_s", "subjects"],
+            rows, "\nphases (newton work by level/beta):"))
+
+    if summary["levels"]:
+        rows = [
+            ["x".join(map(str, l["shape"])), l["newton_iters"],
+             l["hessian_matvecs"], _f(l["fine_equiv_matvecs"], ".1f"),
+             _f(l.get("precond_fine_equiv_matvecs"), ".1f"), _f(l["wall_s"], ".2f")]
+            for l in summary["levels"]
+        ]
+        out.append(_table(
+            ["grid", "newton", "matvecs", "fine_equiv", "precond_fe", "wall_s"],
+            rows, "\nladder levels:"))
+
+    if summary["spans"]:
+        rows = [
+            [path, s["count"], _f(s["total_s"]), _f(s["mean_s"], ".4f")]
+            for path, s in sorted(summary["spans"].items())
+        ]
+        out.append(_table(["span", "count", "total_s", "mean_s"], rows,
+                          "\nspans (wall-clock):"))
+
+    if summary["jobs"]:
+        rows = [
+            [j["job_id"], j["slot"], j["newton_iters"], j["hessian_matvecs"],
+             j["queue_wait_steps"], f"{j['rel_gnorm']:.2e}",
+             "yes" if j["converged"] else "NO"]
+            for j in summary["jobs"]
+        ]
+        out.append(_table(
+            ["job", "slot", "newton", "matvecs", "queue_wait", "rel_gnorm", "conv"],
+            rows, "\njobs (per-tenant billing):"))
+    if summary["serve"]:
+        sv = summary["serve"]
+        out.append(
+            f"\nserve: {sv['steps']} cohort steps, mean occupancy "
+            f"{sv['mean_occupancy']:.2f}/{sv['slots']}, {sv['refills']} refills, "
+            f"max queue {sv['max_queue']}"
+        )
+
+    if summary["collectives"]:
+        kinds_order = ("all-to-all", "collective-permute", "all-gather",
+                       "all-reduce", "reduce-scatter")
+        rows = []
+        for label, coll in sorted(summary["collectives"].items()):
+            rows.append(
+                [label]
+                + [coll.get(kn, {}).get("count", 0) for kn in kinds_order]
+                + [coll.get("total_bytes", 0)]
+            )
+        out.append(_table(
+            ["program", "a2a", "permute", "gather", "reduce", "rscatter", "bytes"],
+            rows, "\ncollectives (per compiled program):"))
+
+    if summary["counters"]:
+        rows = [[name, total] for name, total in sorted(summary["counters"].items())]
+        out.append(_table(["counter", "total"], rows, "\ncounters:"))
+
+    if summary["bench"]:
+        rows = [[b["name"], _f(b["us_per_call"], ".1f"), b.get("derived", "")]
+                for b in summary["bench"]]
+        out.append(_table(["bench", "us/call", "derived"], rows, "\nbench rows:"))
+
+    return "\n".join(out)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="telemetry JSONL trace file")
+    ap.add_argument("--validate", action="store_true",
+                    help="check every record against the schema; non-zero exit "
+                         "on any violation")
+    ap.add_argument("--json", action="store_true",
+                    help="print the summary as JSON instead of tables")
+    args = ap.parse_args(argv)
+
+    recs = load(args.trace)
+    if args.validate:
+        bad = 0
+        for i, r in enumerate(recs, 1):
+            for err in validate_record(r):
+                print(f"{args.trace}:{i}: {err}", file=sys.stderr)
+                bad += 1
+        if bad:
+            print(f"{bad} schema violation(s) in {len(recs)} records",
+                  file=sys.stderr)
+            return 1
+        print(f"{len(recs)} records validate (schema v"
+              f"{recs[0]['v'] if recs else '?'})")
+
+    summary = summarize(recs)
+    print(json.dumps(summary, indent=1) if args.json else render(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

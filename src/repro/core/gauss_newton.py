@@ -26,6 +26,7 @@ import numpy as np
 from repro.core import objective as obj
 from repro.core.grid import Grid
 from repro.core.spectral import SpectralOps
+from repro import telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +78,7 @@ class NewtonLog(NamedTuple):
     gnorm: jnp.ndarray
     cg_iters: jnp.ndarray
     step_len: jnp.ndarray
+    ls_iters: jnp.ndarray | int = 0  # Armijo backtracking trials
 
 
 def pcg(
@@ -284,6 +286,7 @@ def newton_iteration(
         gnorm=gnorm,
         cg_iters=sol.iters,
         step_len=jnp.where(accepted, alpha, 0.0),
+        ls_iters=ls_it,
     )
     return v_new, log
 
@@ -350,7 +353,10 @@ def solve(
         g0 = None if g0_ref is None else jnp.float32(g0_ref)
         g_forcing = None
         for it in range(cfg.max_newton):
-            v, log = step_fn(v, g_forcing if g_forcing is not None else jnp.float32(1e-30))
+            with telemetry.span("gn.newton_iter", beta=float(beta), iter=it) as sp:
+                v, log = sp.sync(
+                    step_fn(v, g_forcing if g_forcing is not None else jnp.float32(1e-30))
+                )
             if g_forcing is None:
                 g_forcing = log.gnorm
             if g0 is None:
@@ -368,19 +374,44 @@ def solve(
                 "rel_gnorm": float(log.gnorm / max(float(g0), 1e-30)),
                 "cg_iters": int(log.cg_iters),
                 "step": float(log.step_len),
+                "armijo_trials": int(log.ls_iters),
             }
             history.append(rec)
             if callback:
                 callback(it, rec)
-            if verbose:
-                print(
-                    f"[beta={beta:.0e}] it={it:2d} J={rec['J']:.4e} "
-                    f"misfit={rec['misfit']:.4e} |g|/|g0|={rec['rel_gnorm']:.3e} "
-                    f"cg={rec['cg_iters']} step={rec['step']:.3f}"
-                )
+            # the single console sink renders this exactly as the old
+            # verbose print did; a JSONL sink gets the typed record
+            telemetry.emit(
+                telemetry.NewtonIterEvent(
+                    source="gn.solve",
+                    beta=rec["beta"],
+                    iter=it,
+                    j_val=rec["J"],
+                    misfit=rec["misfit"],
+                    reg=rec["reg"],
+                    gnorm=rec["gnorm"],
+                    rel_gnorm=rec["rel_gnorm"],
+                    cg_iters=rec["cg_iters"],
+                    step_len=rec["step"],
+                    armijo_trials=rec["armijo_trials"],
+                    wall_s=sp.wall_s,
+                    level=rec.get("level"),
+                ),
+                echo=verbose,
+            )
             if rec["rel_gnorm"] <= cfg.gtol or rec["step"] == 0.0:
                 break
 
+    telemetry.emit(
+        telemetry.SolveEvent(
+            source="gn.solve",
+            newton_iters=total_newton,
+            hessian_matvecs=total_matvecs,
+            fine_equiv_matvecs=float(total_matvecs),
+            precond_fine_equiv_matvecs=total_precond_fe,
+            compiled_executables=None,
+        )
+    )
     return {
         "v": v,
         "history": history,
@@ -471,7 +502,7 @@ def newton_iteration_cohort(
 
     alpha0 = jnp.ones((v.shape[0],), jnp.float32)
     j1 = j_of(v + bc(alpha0) * dv)
-    alpha, j_new, _ = jax.lax.while_loop(ls_cond, ls_body, (alpha0, j1, jnp.int32(0)))
+    alpha, j_new, ls_it = jax.lax.while_loop(ls_cond, ls_body, (alpha0, j1, jnp.int32(0)))
     accepted = active & (j_new < state.j_val)
     v_new = jnp.where(bc(accepted), v + bc(alpha) * dv, v)
 
@@ -482,6 +513,7 @@ def newton_iteration_cohort(
         gnorm=gnorm,
         cg_iters=sol.iters,
         step_len=jnp.where(accepted, alpha, 0.0),
+        ls_iters=ls_it,  # shared lockstep halvings (scalar, not per-subject)
     )
     return v_new, log
 
@@ -599,7 +631,10 @@ def solve_cohort(
             act_np = np.asarray(stage_act)
             if not act_np.any():
                 break
-            v, log = step_fn(v, g_forcing, stage_act, jnp.float32(beta), rho_R, rho_T)
+            with telemetry.span("gn.cohort_iter", beta=float(beta), iter=it) as sp:
+                v, log = sp.sync(
+                    step_fn(v, g_forcing, stage_act, jnp.float32(beta), rho_R, rho_T)
+                )
             if not have_forcing:
                 g_forcing = log.gnorm
                 have_forcing = True
@@ -622,19 +657,32 @@ def solve_cohort(
                 "cg_iters": [int(x) for x in np.asarray(log.cg_iters)],
                 "step": [float(x) for x in step],
                 "active": [bool(x) for x in act_np],
+                "armijo_trials": int(log.ls_iters),
             }
             history.append(rec)
             if callback:
                 callback(it, rec)
-            if verbose:
-                live = int(act_np.sum())
-                print(
-                    f"[beta={beta:.0e}] it={it:2d} live={live}/{S} "
-                    f"max|g|/|g0|={max(rec['rel_gnorm']):.3e} "
-                    f"cg={rec['cg_iters']}"
-                )
+            telemetry.emit(
+                telemetry.NewtonIterEvent(
+                    source="gn.solve_cohort",
+                    beta=rec["beta"],
+                    iter=it,
+                    j_val=rec["J"],
+                    misfit=rec["misfit"],
+                    reg=rec["reg"],
+                    gnorm=rec["gnorm"],
+                    rel_gnorm=rec["rel_gnorm"],
+                    cg_iters=rec["cg_iters"],
+                    step_len=rec["step"],
+                    armijo_trials=rec["armijo_trials"],
+                    wall_s=sp.wall_s,
+                    subjects=S,
+                    active=rec["active"],
+                ),
+                echo=verbose,
+            )
 
-    return {
+    out = {
         "v": v,
         "history": history,
         "newton_iters": [int(x) for x in newton_counts],
@@ -644,3 +692,13 @@ def solve_cohort(
         "active": [bool(x) for x in np.asarray(active0)],
         "compiled_executables": int(step_fn._cache_size()),
     }
+    telemetry.emit(
+        telemetry.SolveEvent(
+            source="gn.solve_cohort",
+            newton_iters=out["newton_iters"],
+            hessian_matvecs=out["hessian_matvecs"],
+            fine_equiv_matvecs=out["fine_equiv_matvecs"],
+            compiled_executables=out["compiled_executables"],
+        )
+    )
+    return out

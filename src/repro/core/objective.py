@@ -51,6 +51,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import semilag
 from repro.core.grid import Grid
 from repro.core.planner import SLPlan, make_plan
@@ -93,6 +94,7 @@ def _norm_sq(grid: Grid, x: jnp.ndarray, cohort: bool) -> jnp.ndarray:
     return grid.norm_sq_per(x) if cohort else grid.norm_sq(x)
 
 
+@telemetry.annotate("objective.evaluate")
 def evaluate_objective(
     v: jnp.ndarray, prob: Problem, ops: SpectralOps, interp=None, plan: SLPlan | None = None
 ):
@@ -112,6 +114,7 @@ def evaluate_objective(
     return misfit + reg, (misfit, reg, rho_series, plan)
 
 
+@telemetry.annotate("objective.newton_state")
 def newton_state(
     v: jnp.ndarray, prob: Problem, ops: SpectralOps, interp=None
 ) -> NewtonState:
@@ -166,6 +169,7 @@ def newton_state(
     )
 
 
+@telemetry.annotate("objective.gn_hessian_matvec")
 def gn_hessian_matvec(
     vtilde: jnp.ndarray,
     state: NewtonState,
@@ -193,6 +197,7 @@ def gn_hessian_matvec(
     return ops.reg_apply(vtilde, prob.beta) + bt
 
 
+@telemetry.annotate("objective.full_hessian_matvec")
 def full_hessian_matvec(
     vtilde: jnp.ndarray, state: NewtonState, prob: Problem, ops: SpectralOps, interp=None
 ) -> jnp.ndarray:

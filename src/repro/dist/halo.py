@@ -48,6 +48,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry
 from repro.core.grid import Grid
 from repro.kernels import ref
 from repro.kernels.tricubic import (
@@ -290,14 +291,20 @@ def make_checked_interp(halo_interp, mesh, axes, halo: int, on_overflow: str = "
         lead = (None,) * (ndim - 3)
         return NamedSharding(mesh, P(*lead, a1, a2, None))
 
+    def _record_overflow(n):
+        # host-side: count the violation and render the legacy warning line
+        # (echo keeps the printed diagnostic; sinks additionally get a
+        # ``halo_budget_exceeded`` counter event with the offending bound)
+        telemetry.counter(
+            "halo_budget_exceeded", echo=True,
+            required=float(n), budget=halo, mode=on_overflow,
+        )
+
     def warn_if(ok, need):
         lax.cond(
             ok,
             lambda n: None,
-            lambda n: jax.debug.print(
-                "halo-interp overflow: required halo {n} > budget "
-                + str(halo) + " ({m})", n=n, m=on_overflow,
-            ),
+            lambda n: jax.debug.callback(_record_overflow, n),
             need,
         )
 

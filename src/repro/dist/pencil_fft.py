@@ -65,6 +65,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry
 from repro.core.grid import Grid
 from repro.launch.mesh import mesh_axes_size, validate_mesh_for_grid
 
@@ -188,10 +189,12 @@ class PencilFFT:
         return out.reshape(lead + out.shape[-3:])
 
     def fwd(self, u: jnp.ndarray) -> jnp.ndarray:
-        return self._batched(self._fwd4, u)
+        with telemetry.annotate("pencil_fft.fwd"):
+            return self._batched(self._fwd4, u)
 
     def inv(self, spec: jnp.ndarray) -> jnp.ndarray:
-        return self._batched(self._inv4, spec).real.astype(self.grid.dtype)
+        with telemetry.annotate("pencil_fft.inv"):
+            return self._batched(self._inv4, spec).real.astype(self.grid.dtype)
 
     def constrain_k(self, spec: jnp.ndarray) -> jnp.ndarray:
         """Pin a k-space array to this backend's pencil sharding.
@@ -233,17 +236,18 @@ class PencilFFT:
         h = b // 2
         if h == 0:
             return self.fwd(u)
-        pairs = u[0 : 2 * h : 2] + 1j * u[1 : 2 * h : 2]  # (h, space)
-        if b % 2:
-            pairs = jnp.concatenate([pairs, u[2 * h :].astype(pairs.dtype)], axis=0)
-        z = self._fwd4(pairs)
-        zr = jnp.conj(self._reverse_k(z[:h]))  # conj Z(-k)
-        fa = 0.5 * (z[:h] + zr)
-        fb = -0.5j * (z[:h] - zr)
-        out = jnp.stack([fa, fb], axis=1).reshape((2 * h,) + z.shape[1:])
-        if b % 2:
-            out = jnp.concatenate([out, z[h:]], axis=0)
-        return out
+        with telemetry.annotate("pencil_fft.fwd_packed"):
+            pairs = u[0 : 2 * h : 2] + 1j * u[1 : 2 * h : 2]  # (h, space)
+            if b % 2:
+                pairs = jnp.concatenate([pairs, u[2 * h :].astype(pairs.dtype)], axis=0)
+            z = self._fwd4(pairs)
+            zr = jnp.conj(self._reverse_k(z[:h]))  # conj Z(-k)
+            fa = 0.5 * (z[:h] + zr)
+            fb = -0.5j * (z[:h] - zr)
+            out = jnp.stack([fa, fb], axis=1).reshape((2 * h,) + z.shape[1:])
+            if b % 2:
+                out = jnp.concatenate([out, z[h:]], axis=0)
+            return out
 
     def inv_packed(self, spec: jnp.ndarray) -> jnp.ndarray:
         """Inverse of ``(B, N1, N2, N3)`` real-destined spectra, two per ride.
@@ -256,11 +260,14 @@ class PencilFFT:
         h = b // 2
         if h == 0:
             return self.inv(spec)
-        pairs = spec[0 : 2 * h : 2] + 1j * spec[1 : 2 * h : 2]
-        if b % 2:
-            pairs = jnp.concatenate([pairs, spec[2 * h :]], axis=0)
-        z = self._inv4(pairs)
-        out = jnp.stack([z[:h].real, z[:h].imag], axis=1).reshape((2 * h,) + z.shape[1:])
-        if b % 2:
-            out = jnp.concatenate([out, z[h:].real], axis=0)
-        return out.astype(self.grid.dtype)
+        with telemetry.annotate("pencil_fft.inv_packed"):
+            pairs = spec[0 : 2 * h : 2] + 1j * spec[1 : 2 * h : 2]
+            if b % 2:
+                pairs = jnp.concatenate([pairs, spec[2 * h :]], axis=0)
+            z = self._inv4(pairs)
+            out = jnp.stack([z[:h].real, z[:h].imag], axis=1).reshape(
+                (2 * h,) + z.shape[1:]
+            )
+            if b % 2:
+                out = jnp.concatenate([out, z[h:].real], axis=0)
+            return out.astype(self.grid.dtype)

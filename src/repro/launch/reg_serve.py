@@ -39,6 +39,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import gauss_newton as gn
 from repro.core.grid import Grid, make_grid
 from repro.core.spectral import SpectralOps
@@ -97,8 +98,15 @@ class CohortServer:
         self._cg = np.zeros(S, np.int64)
         self._rel = np.zeros(S, np.float32)
         self.iterations = 0  # cohort step calls (the shared-cost meter)
+        self.refills = 0  # slot fills after a retirement (not initial fills)
+        self._echo = False  # run(verbose=...) renders retirements via telemetry
+        self._enqueued_at: dict[int, int] = {}  # id(job) -> iterations at admit
+        self._admitted_at = np.zeros(S, np.int64)  # iterations at slot fill
+        self._queue_wait = np.zeros(S, np.int64)  # steps spent queued
 
     def admit(self, *jobs: RegJob) -> None:
+        for job in jobs:
+            self._enqueued_at[id(job)] = self.iterations
         self.queue.extend(jobs)
 
     @property
@@ -117,6 +125,12 @@ class CohortServer:
                 self._g0[s] = 0.0
                 self._newton[s] = 0
                 self._cg[s] = 0
+                if self.iterations > 0:
+                    self.refills += 1
+                self._admitted_at[s] = self.iterations
+                self._queue_wait[s] = self.iterations - self._enqueued_at.pop(
+                    id(job), self.iterations
+                )
 
     def _retire(self, s: int, converged: bool) -> JobResult:
         job = self._jobs[s]
@@ -131,6 +145,22 @@ class CohortServer:
         )
         self._jobs[s] = None
         self.results.append(res)
+        # the per-tenant billing record (the paper's Table V meter, per job)
+        telemetry.emit(
+            telemetry.JobEvent(
+                job_id=str(res.job_id),
+                newton_iters=res.newton_iters,
+                hessian_matvecs=res.hessian_matvecs,
+                fine_equiv_matvecs=res.fine_equiv_matvecs,
+                rel_gnorm=res.rel_gnorm,
+                converged=res.converged,
+                slot=s,
+                queue_wait_steps=int(self._queue_wait[s]),
+                admitted_step=int(self._admitted_at[s]),
+                retired_step=self.iterations,
+            ),
+            echo=self._echo,
+        )
         return res
 
     def step(self) -> list[JobResult]:
@@ -166,22 +196,48 @@ class CohortServer:
             converged = self._rel[s] <= self.cfg.gtol
             if converged or step_len[s] == 0.0 or self._newton[s] >= self.cfg.max_newton:
                 retired.append(self._retire(s, converged))
+        telemetry.emit(
+            telemetry.ServeStepEvent(
+                iteration=self.iterations,
+                slots=self.slots,
+                occupancy=int(active.sum()),
+                queue_len=len(self.queue),
+                refills=self.refills,
+            )
+        )
         return retired
 
     def run(self, verbose: bool = False) -> list[JobResult]:
-        while self.queue or self.active.any():
-            retired = self.step()
-            if verbose and retired:
-                for r in retired:
-                    print(
-                        f"  retired job={r.job_id} newton={r.newton_iters} "
-                        f"matvecs={r.hessian_matvecs} |g|/|g0|={r.rel_gnorm:.2e}"
-                        f"{'' if r.converged else ' (not converged)'}"
-                    )
+        self._echo = verbose
+        try:
+            while self.queue or self.active.any():
+                self.step()
+        finally:
+            self._echo = False
         return self.results
 
     def compiled_executables(self) -> int:
         return int(self.step_fn._cache_size())
+
+    def emit_step_collectives(self, label: str = "cohort_step") -> None:
+        """Emit per-kind collective counts for this bucket's step executable.
+
+        Ahead-of-time lowering: does not populate the jit cache, so the
+        one-executable pin of ``compiled_executables`` is unaffected.  No-op
+        unless a telemetry sink is installed (lowering+compiling a second
+        copy of the step is not free).
+        """
+        if not telemetry.enabled():
+            return
+        lowered = self.step_fn.lower(
+            self._v,
+            jnp.asarray(self._g_forcing),
+            jnp.asarray(self.active),
+            jnp.float32(self.cfg.beta),
+            self._rho_R,
+            self._rho_T,
+        )
+        telemetry.emit_collectives(label, lowered)
 
 
 def serve_jobs(jobs: list[RegJob], cfg: gn.GNConfig, slots: int = 4,
@@ -201,6 +257,7 @@ def serve_jobs(jobs: list[RegJob], cfg: gn.GNConfig, slots: int = 4,
         server = CohortServer(make_grid(shape), cfg, slots=slots, ops=ops, interp=interp)
         server.admit(*group)
         results += server.run(verbose=verbose)
+        server.emit_step_collectives(f"cohort_step{shape}")
         stats[shape] = {
             "jobs": len(group),
             "cohort_iterations": server.iterations,
@@ -220,6 +277,9 @@ def main():
     ap.add_argument("--max-cg", type=int, default=30)
     ap.add_argument("--gtol", type=float, default=1e-2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", type=str, default=None,
+                    help="write a telemetry JSONL trace to this path "
+                         "(render with: python -m repro.analysis.trace_report)")
     args = ap.parse_args()
 
     from repro.data.synthetic import synthetic_problem
@@ -233,8 +293,12 @@ def main():
         rho_R, rho_T, _, _ = synthetic_problem(args.size, n_t=args.n_t, amplitude=amp)
         jobs.append(RegJob(job_id=f"job{j}(amp={amp:.2f})", rho_R=rho_R, rho_T=rho_T))
 
+    import contextlib
+
+    sink = telemetry.jsonl_sink(args.trace) if args.trace else contextlib.nullcontext()
     t0 = time.time()
-    out = serve_jobs(jobs, cfg, slots=args.slots, verbose=True)
+    with sink:
+        out = serve_jobs(jobs, cfg, slots=args.slots, verbose=True)
     dt = time.time() - t0
     for shape, st in out["buckets"].items():
         print(

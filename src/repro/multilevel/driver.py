@@ -32,6 +32,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import gauss_newton as gn
 from repro.core import objective as obj
 from repro.core.grid import Grid
@@ -138,38 +139,57 @@ def solve(
             if callback:
                 callback(it, rec)
 
-        if verbose:
-            print(f"=== level {lv}/{n_levels - 1}: {lgrid.shape} "
-                  f"betas={hier.betas[lv]} warm={warm} ===")
-        t0 = time.time()
-        out = gn.solve(
-            rho_R_l, rho_T_l, lgrid, lcfg,
-            ops=lops, v0=v, verbose=verbose, callback=level_cb, interp=linterp,
-            precond=precond, g0_ref=g0_ref,
+        telemetry.emit(
+            telemetry.LevelStartEvent(
+                level=lv,
+                n_levels=n_levels,
+                shape=list(lgrid.shape),
+                betas=[float(b) for b in hier.betas[lv]],
+                warm_start=warm,
+            ),
+            echo=verbose,
         )
+        t0 = time.time()
+        with telemetry.span("multilevel.level", level=lv, shape=list(lgrid.shape)) as sp:
+            out = gn.solve(
+                rho_R_l, rho_T_l, lgrid, lcfg,
+                ops=lops, v0=v, verbose=verbose, callback=level_cb, interp=linterp,
+                precond=precond, g0_ref=g0_ref,
+            )
+            sp.sync(out["v"])
         wall = time.time() - t0
         v = out["v"]
         history.extend(out["history"])
         # preconditioner-internal coarse matvecs, charged in LADDER-fine units
         # (gn.solve reports them relative to the level's own grid)
         pc_fe = out.get("precond_fine_equiv_matvecs", 0.0) * hier.fine_equiv_weight(lv)
-        levels.append(
-            {
-                "level": lv,
-                "shape": list(lgrid.shape),
-                "betas": [float(b) for b in hier.betas[lv]],
-                "warm_start": warm,
-                "newton_iters": out["newton_iters"],
-                "hessian_matvecs": out["hessian_matvecs"],
-                "fine_equiv_matvecs": out["hessian_matvecs"] * hier.fine_equiv_weight(lv),
-                "precond_fine_equiv_matvecs": pc_fe,
-                "wall_s": wall,
-                "rel_gnorm": out["history"][-1]["rel_gnorm"] if out["history"] else None,
-            }
-        )
+        level_rec = {
+            "level": lv,
+            "shape": list(lgrid.shape),
+            "betas": [float(b) for b in hier.betas[lv]],
+            "warm_start": warm,
+            "newton_iters": out["newton_iters"],
+            "hessian_matvecs": out["hessian_matvecs"],
+            "fine_equiv_matvecs": out["hessian_matvecs"] * hier.fine_equiv_weight(lv),
+            "precond_fine_equiv_matvecs": pc_fe,
+            "wall_s": wall,
+            "rel_gnorm": out["history"][-1]["rel_gnorm"] if out["history"] else None,
+        }
+        levels.append(level_rec)
+        telemetry.emit(telemetry.LevelEvent(**level_rec))
 
     fine_equiv = sum(l["fine_equiv_matvecs"] for l in levels)
     precond_fe = sum(l["precond_fine_equiv_matvecs"] for l in levels)
+    telemetry.emit(
+        telemetry.SolveEvent(
+            source="multilevel.solve",
+            newton_iters=sum(l["newton_iters"] for l in levels),
+            hessian_matvecs=sum(l["hessian_matvecs"] for l in levels),
+            fine_equiv_matvecs=fine_equiv,
+            precond_fine_equiv_matvecs=precond_fe,
+            wall_s=sum(l["wall_s"] for l in levels),
+        )
+    )
     return {
         "v": v,
         "history": history,

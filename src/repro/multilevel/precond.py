@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import gauss_newton as gn
 from repro.core import objective as obj
 from repro.core.planner import SLPlan
@@ -264,6 +265,7 @@ def make_vcycle_precond(
             iters = n_cg_coarse if l - 1 == 0 else n_cg
             mv_c = matvec(l - 1)
 
+            @telemetry.annotate(f"precond.vcycle_l{l}")
             def apply(r):
                 spec = ops_f.fwd_real(r)  # (3, fine-k): the ONE fine forward
                 spec_c = transfer.restrict_spec(spec, ops_f, ops_c)

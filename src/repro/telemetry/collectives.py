@@ -1,0 +1,57 @@
+"""Collective counting on lowered/compiled programs, as a first-class API.
+
+Before this module every counted-collective pin re-derived its numbers
+inline from HLO text (``tests/test_coalesce.py``, ``benchmarks/fft_suite``,
+``benchmarks/interp_suite`` each had a private counter).
+``count_collectives`` is the shared path: give it a ``jax.stages.Lowered``
+(compiled on demand), a ``Compiled``, or optimized-HLO text, and get the
+per-kind ``{"count", "bytes"}`` table that the byte parser of
+``repro.analysis.roofline`` extracts — all-to-all, collective-permute,
+all-gather, all-reduce, reduce-scatter, plus ``total_bytes``/``total_count``.
+
+``emit_collectives`` attaches that table to the telemetry stream as a
+labelled ``collectives`` event — how a serve/benchmark run records the
+communication structure of the program it kept hot, next to the wall-clock
+and matvec meters ``trace_report`` renders.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+
+def hlo_text(obj: Any) -> str:
+    """Optimized-HLO text from a Lowered / Compiled / str."""
+    if isinstance(obj, str):
+        return obj
+    import jax
+
+    if isinstance(obj, jax.stages.Lowered):
+        # .as_text() on a Lowered is pre-SPMD StableHLO — collectives are
+        # only final (and byte-annotated) after compilation
+        return obj.compile().as_text()
+    if hasattr(obj, "as_text"):
+        return obj.as_text()
+    raise TypeError(
+        f"count_collectives wants a jax Lowered/Compiled or HLO text, got {type(obj)}"
+    )
+
+
+def count_collectives(obj: Any) -> dict:
+    """Per-kind collective counts and output bytes of a compiled program."""
+    from repro.analysis.roofline import parse_collective_bytes
+
+    out = parse_collective_bytes(hlo_text(obj))
+    out["total_count"] = sum(
+        v["count"] for v in out.values() if isinstance(v, dict)
+    )
+    return out
+
+
+def emit_collectives(label: str, obj: Any, echo: bool = False) -> dict:
+    """Count collectives on ``obj`` and emit them as a telemetry event."""
+    from repro.telemetry import events as ev
+    from repro.telemetry import runtime
+
+    coll = count_collectives(obj)
+    runtime.emit(ev.CollectivesEvent(label=label, collectives=coll), echo=echo)
+    return coll

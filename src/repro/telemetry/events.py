@@ -1,0 +1,236 @@
+"""Typed telemetry events and the versioned JSON-lines record schema.
+
+Every record written by a sink is one JSON object per line:
+
+    {"v": 1, "ts": <unix seconds>, "kind": "<event kind>", ...payload}
+
+``v`` is ``SCHEMA_VERSION`` — bumped whenever a required field is added,
+removed, or retyped, so downstream consumers (``repro.analysis.trace_report``,
+the serving dashboard) can reject traces they do not understand instead of
+mis-parsing them.  ``validate_record`` is the schema contract: it is what
+``scripts/ci.sh`` runs over every emitted event, and what the
+schema-stability test in ``tests/test_telemetry.py`` pins.
+
+The event classes replace the dict soup the solver layers used to pass
+around: each carries exactly the meters that layer owns (``gn.solve`` — the
+Newton/PCG/Armijo counters; ``multilevel.solve`` — per-level matvec billing;
+``launch.reg_serve`` — per-job queue-wait/slot/billing).  Cohort-shaped
+emitters put per-subject lists in the same fields a single solve puts
+scalars in; ``subjects`` disambiguates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numbers
+import time
+from typing import Any, ClassVar
+
+SCHEMA_VERSION = 1
+
+
+def _clean(x):
+    """JSON-ready copy: numpy/jax scalars -> python, arrays -> lists."""
+    if isinstance(x, dict):
+        return {str(k): _clean(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_clean(v) for v in x]
+    if isinstance(x, bool) or x is None or isinstance(x, (str, int, float)):
+        return x
+    if isinstance(x, numbers.Integral):
+        return int(x)
+    if isinstance(x, numbers.Real):
+        return float(x)
+    if hasattr(x, "tolist"):  # numpy / jax array or scalar
+        return _clean(x.tolist())
+    if hasattr(x, "item"):
+        return _clean(x.item())
+    return str(x)
+
+
+@dataclasses.dataclass
+class Event:
+    """Base event: subclasses set ``kind`` and declare payload fields."""
+
+    kind: ClassVar[str] = ""
+
+    def to_record(self) -> dict:
+        rec = {"v": SCHEMA_VERSION, "ts": time.time(), "kind": self.kind}
+        for f in dataclasses.fields(self):
+            rec[f.name] = _clean(getattr(self, f.name))
+        return rec
+
+
+@dataclasses.dataclass
+class SpanEvent(Event):
+    """Closed ``telemetry.span``: wall-clock after ``block_until_ready``."""
+
+    kind: ClassVar[str] = "span"
+    name: str
+    wall_s: float
+    path: str = ""  # slash-joined nesting, e.g. "multilevel.solve/gn.solve"
+    depth: int = 0
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class NewtonIterEvent(Event):
+    """One Newton iteration of ``gn.solve`` (scalars) or ``gn.solve_cohort``
+    (per-subject lists in the same fields; ``subjects`` > 0)."""
+
+    kind: ClassVar[str] = "newton_iter"
+    source: str  # "gn.solve" | "gn.solve_cohort" | "reg_serve"
+    beta: float
+    iter: int
+    j_val: Any
+    misfit: Any
+    reg: Any
+    gnorm: Any
+    rel_gnorm: Any
+    cg_iters: Any  # the paper's Table V matvec meter
+    step_len: Any
+    armijo_trials: int = 0
+    wall_s: float | None = None
+    level: int | None = None  # set by the multilevel driver's callback
+    subjects: int = 0  # 0: single solve; >0: cohort width S
+    active: Any = None  # cohort live mask
+
+
+@dataclasses.dataclass
+class LevelEvent(Event):
+    """One completed ladder level of ``multilevel.solve``."""
+
+    kind: ClassVar[str] = "level"
+    level: int
+    shape: list
+    betas: list
+    warm_start: bool
+    newton_iters: int
+    hessian_matvecs: int
+    fine_equiv_matvecs: float
+    precond_fine_equiv_matvecs: float
+    wall_s: float
+    rel_gnorm: float | None = None
+
+
+@dataclasses.dataclass
+class LevelStartEvent(Event):
+    kind: ClassVar[str] = "level_start"
+    level: int
+    n_levels: int
+    shape: list
+    betas: list
+    warm_start: bool
+
+
+@dataclasses.dataclass
+class JobEvent(Event):
+    """One retired registration job of ``launch.reg_serve`` — the per-tenant
+    billing record (matvecs = what this job's masked PCG consumed)."""
+
+    kind: ClassVar[str] = "job"
+    job_id: str
+    newton_iters: int
+    hessian_matvecs: int
+    fine_equiv_matvecs: float
+    rel_gnorm: float
+    converged: bool
+    slot: int = -1
+    queue_wait_steps: int = 0  # cohort iterations spent queued before a slot
+    admitted_step: int = 0  # server.iterations when the job entered its slot
+    retired_step: int = 0
+
+
+@dataclasses.dataclass
+class ServeStepEvent(Event):
+    """One cohort iteration of a ``CohortServer``: the occupancy meter."""
+
+    kind: ClassVar[str] = "serve_step"
+    iteration: int
+    slots: int
+    occupancy: int  # live subjects this step
+    queue_len: int
+    refills: int  # cumulative slot refills (fills after the initial ones)
+
+
+@dataclasses.dataclass
+class CounterEvent(Event):
+    kind: ClassVar[str] = "counter"
+    name: str
+    value: float
+    total: float  # process-lifetime accumulation of this counter
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class CollectivesEvent(Event):
+    """``telemetry.count_collectives`` output attached to a labelled program:
+    per-kind {count, bytes} for all-to-all / collective-permute / ..."""
+
+    kind: ClassVar[str] = "collectives"
+    label: str
+    collectives: dict
+
+
+@dataclasses.dataclass
+class BenchEvent(Event):
+    """One ``benchmarks.common.emit`` row (CSV line kept on stdout)."""
+
+    kind: ClassVar[str] = "bench"
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+
+@dataclasses.dataclass
+class SolveEvent(Event):
+    """End-of-solve summary: the meters ``gn.solve``/``solve_cohort`` return."""
+
+    kind: ClassVar[str] = "solve"
+    source: str
+    newton_iters: Any
+    hessian_matvecs: Any
+    fine_equiv_matvecs: Any = None
+    precond_fine_equiv_matvecs: Any = None
+    compiled_executables: int | None = None
+    wall_s: float | None = None
+
+
+EVENT_KINDS = {
+    cls.kind: cls
+    for cls in (
+        SpanEvent, NewtonIterEvent, LevelEvent, LevelStartEvent, JobEvent,
+        ServeStepEvent, CounterEvent, CollectivesEvent, BenchEvent, SolveEvent,
+    )
+}
+
+# fields that MUST be present (and non-None where it matters) per kind —
+# the schema contract validate_record enforces
+_REQUIRED = {
+    kind: tuple(
+        f.name
+        for f in dataclasses.fields(cls)
+        if f.default is dataclasses.MISSING
+        and f.default_factory is dataclasses.MISSING  # type: ignore[misc]
+    )
+    for kind, cls in EVENT_KINDS.items()
+}
+
+
+def validate_record(rec: Any) -> list[str]:
+    """Return a list of schema violations (empty list: valid)."""
+    errs: list[str] = []
+    if not isinstance(rec, dict):
+        return [f"record is {type(rec).__name__}, not an object"]
+    v = rec.get("v")
+    if v != SCHEMA_VERSION:
+        errs.append(f"schema version {v!r} != {SCHEMA_VERSION}")
+    if not isinstance(rec.get("ts"), (int, float)):
+        errs.append(f"ts {rec.get('ts')!r} is not a timestamp")
+    kind = rec.get("kind")
+    if kind not in _REQUIRED:
+        errs.append(f"unknown kind {kind!r}")
+        return errs
+    for name in _REQUIRED[kind]:
+        if name not in rec:
+            errs.append(f"{kind}: missing required field {name!r}")
+    return errs

@@ -1,0 +1,168 @@
+"""Telemetry sinks: JSON-lines file sink and the console renderer.
+
+``JsonlSink`` is the durable feed (one schema-versioned JSON object per
+line, append-only, flushed per event so a killed run keeps its trace);
+``ConsoleSink`` is the single renderer behind every ``verbose=`` knob in
+the repo — the solver/ladder/server layers emit events and this module
+turns them into exactly the progress lines those layers used to ``print``,
+so default output is unchanged while the same event stream also lands in
+the JSONL trace.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import IO
+
+
+class JsonlSink:
+    """Append schema-versioned records to ``path``, one JSON object per line.
+
+    Usable as a context manager (``with telemetry.jsonl_sink(p): ...``)
+    which installs/removes itself from the global sink registry, or
+    directly via ``telemetry.add_sink``.
+    """
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._f: IO[str] = open(self.path, "a")
+        self.n_written = 0
+
+    def write(self, rec: dict) -> None:
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+        self.n_written += 1
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self):
+        from repro.telemetry import runtime
+
+        runtime.add_sink(self)
+        return self
+
+    def __exit__(self, *exc):
+        from repro.telemetry import runtime
+
+        runtime.remove_sink(self)
+        self.close()
+        return False
+
+
+# --------------------------------------------------------------------------- #
+# console rendering — the one place progress-line formats live
+# --------------------------------------------------------------------------- #
+def _fmt_seq(x):
+    return tuple(x) if isinstance(x, (list, tuple)) else x
+
+
+def render(rec: dict) -> str | None:
+    """Legacy progress line for ``rec``, or None if the kind has no line."""
+    kind = rec.get("kind")
+    if kind == "newton_iter":
+        if rec.get("subjects"):
+            live = sum(1 for a in (rec.get("active") or []) if a)
+            rel = rec["rel_gnorm"]
+            return (
+                f"[beta={rec['beta']:.0e}] it={rec['iter']:2d} "
+                f"live={live}/{rec['subjects']} "
+                f"max|g|/|g0|={max(rel):.3e} "
+                f"cg={rec['cg_iters']}"
+            )
+        return (
+            f"[beta={rec['beta']:.0e}] it={rec['iter']:2d} J={rec['j_val']:.4e} "
+            f"misfit={rec['misfit']:.4e} |g|/|g0|={rec['rel_gnorm']:.3e} "
+            f"cg={rec['cg_iters']} step={rec['step_len']:.3f}"
+        )
+    if kind == "level_start":
+        return (
+            f"=== level {rec['level']}/{rec['n_levels'] - 1}: "
+            f"{_fmt_seq(rec['shape'])} betas={_fmt_seq(rec['betas'])} "
+            f"warm={rec['warm_start']} ==="
+        )
+    if kind == "job":
+        return (
+            f"  retired job={rec['job_id']} newton={rec['newton_iters']} "
+            f"matvecs={rec['hessian_matvecs']} |g|/|g0|={rec['rel_gnorm']:.2e}"
+            f"{'' if rec['converged'] else ' (not converged)'}"
+        )
+    if kind == "counter":
+        if rec["name"] == "halo_budget_exceeded":
+            a = rec.get("attrs", {})
+            return (
+                f"halo-interp overflow: required halo {a.get('required')} > "
+                f"budget {a.get('budget')} ({a.get('mode')})"
+            )
+        return f"[counter] {rec['name']}={rec['value']} total={rec['total']}"
+    if kind == "span":
+        return f"[span] {rec['path'] or rec['name']}: {rec['wall_s']:.4f}s"
+    if kind == "serve_step":
+        return (
+            f"[serve] it={rec['iteration']} occupancy={rec['occupancy']}/"
+            f"{rec['slots']} queue={rec['queue_len']} refills={rec['refills']}"
+        )
+    if kind == "level":
+        return (
+            f"[level {rec['level']}] newton={rec['newton_iters']} "
+            f"matvecs={rec['hessian_matvecs']} "
+            f"fine_equiv={rec['fine_equiv_matvecs']:.1f} "
+            f"wall={rec['wall_s']:.2f}s"
+        )
+    if kind == "bench":
+        return f"[bench] {rec['name']},{rec['us_per_call']:.1f},{rec['derived']}"
+    return None
+
+
+# event kinds rendered per verbosity level; level 2 adds the firehose
+_LEVEL1 = ("newton_iter", "level_start", "job", "counter")
+_LEVEL2 = _LEVEL1 + ("span", "serve_step", "level", "bench", "solve", "collectives")
+
+
+class ConsoleSink:
+    """Render events as the legacy progress lines behind a verbosity knob.
+
+    ``verbosity=1`` shows what ``verbose=True`` used to print (per-iteration
+    progress, level headers, job retirements, overflow warnings);
+    ``verbosity=2`` additionally prints spans, serve occupancy, level
+    summaries, and bench rows.
+    """
+
+    def __init__(self, verbosity: int = 1, stream: IO[str] | None = None):
+        self.verbosity = verbosity
+        self.stream = stream if stream is not None else sys.stdout
+
+    def write(self, rec: dict) -> None:
+        kinds = _LEVEL2 if self.verbosity >= 2 else _LEVEL1
+        if rec.get("kind") not in kinds:
+            return
+        line = render(rec)
+        if line is not None:
+            print(line, file=self.stream)
+
+
+class ListSink:
+    """In-memory sink (tests / programmatic consumers)."""
+
+    def __init__(self):
+        self.records: list[dict] = []
+
+    def write(self, rec: dict) -> None:
+        self.records.append(rec)
+
+    def __enter__(self):
+        from repro.telemetry import runtime
+
+        runtime.add_sink(self)
+        return self
+
+    def __exit__(self, *exc):
+        from repro.telemetry import runtime
+
+        runtime.remove_sink(self)
+        return False
