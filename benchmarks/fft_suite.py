@@ -15,10 +15,18 @@ Writes ``BENCH_fft.json`` at the repo root (structure pinned by
     Lap of the same ``v``): eager per-call vs one ``SpectralBatch`` ride;
   - **packed vs unpacked**: all-to-all *bytes* (from the compiled HLO) and
     wall time of a batched forward with ``PencilFFT(packed=...)``;
-  - **chunked vs unchunked**: wall time of a batched fwd+inv roundtrip per
-    ``chunk`` setting, with exact parity asserted (the overlap itself
-    needs real hardware; placeholder-device wall times mainly confirm the
-    chunked program costs no extra work).
+  - **chunked vs unchunked**: wall time AND counted all-to-alls of a
+    batched fwd+inv roundtrip per ``chunk`` setting (incl. the
+    ``"auto"`` heuristic with its ``resolve_chunk`` result), with exact
+    parity asserted; the ``chunk_winner`` block picks the cheapest
+    setting and seeds the first ``repro.autotune`` tuning-cache entry
+    (ISSUE 8 satellite);
+  - **Armijo Parseval lever** (``armijo_trial``): counted all-to-alls of
+    one line-search trial objective with the spectrum-side
+    ``reg_energy`` riding the misfit transport's forward batch vs the
+    old composition through ``reg_apply`` — >= 2 fewer all-to-alls per
+    trial, asserted on every run (the solver-side pin is
+    ``tests/test_coalesce.py::test_armijo_trial_drops_transform_ride_pin``).
 * ``single_device`` — the LocalFFT leg: eager vs coalesced stage-A wall
   time (rfft batching amortization).
 
@@ -63,7 +71,8 @@ from benchmarks.common import time_fn
 
 mesh = make_mesh((2, 4), ("data", "model"))
 grid = make_grid({grid_shape!r})
-ctx = DistContext(grid, mesh, halo=2)
+# A/B measurement context: never consult the tuning cache this suite seeds
+ctx = DistContext(grid, mesh, halo=2, autotune="off")
 ops = ctx.ops
 rng = np.random.default_rng(0)
 n_t = 2
@@ -120,7 +129,13 @@ fwd_u = compiled(fft_u.fwd, stack)
 bytes_p = count_collectives(fwd_p)["all-to-all"]["bytes"]
 bytes_u = count_collectives(fwd_u)["all-to-all"]["bytes"]
 
-# ---- chunked vs unchunked roundtrip: parity + wall ----
+# ---- chunked vs unchunked roundtrip: parity + wall + counted a2a ----
+# Exercises resolve_chunk against the AUTO_CHUNK_TARGET_BYTES heuristic:
+# each row records the *resolved* fields-per-chunk for this pencil
+# footprint and the counted all-to-alls of the compiled roundtrip; the
+# winner (fewest a2a launches, wall as tiebreak) seeds the tuning cache —
+# the first autotune entry of a fresh checkout.
+from repro.dist.pencil_fft import AUTO_CHUNK_TARGET_BYTES, resolve_chunk
 ref_spec = fft_p.fwd(stack)
 chunks = []
 for chunk in (None, 1, 2, 4, "auto"):
@@ -130,15 +145,61 @@ for chunk in (None, 1, 2, 4, "auto"):
     chunks.append({{
         "chunk": 0 if chunk is None else fft_c.chunk,
         "label": str(chunk),
+        "resolved_chunk": resolve_chunk(chunk, grid.shape, 2, 4) if chunk is not None else 0,
+        "a2a_count": count_a2a(rt),
         "roundtrip_s": time_fn(rt, stack),
         "fwd_max_err": err,
     }})
+winner_row = min(chunks, key=lambda r: (r["a2a_count"], r["roundtrip_s"]))
+chunk_winner = None if winner_row["label"] == "None" else (
+    "auto" if winner_row["label"] == "auto" else winner_row["chunk"])
+
+# seed the tuning cache with the chunk winner (counted mode, beta-agnostic)
+from repro.autotune import TunedConfig, TuningCache, cell_key
+cache = TuningCache()
+cache.put(
+    cell_key(grid.shape, 8, None),
+    TunedConfig(chunk=chunk_winner, mode="counted", cost=float(winner_row["a2a_count"])),
+)
+
+# ---- Armijo trial: Parseval reg energy vs the pre-Parseval composition ----
+# (the ISSUE 8 lever: each line-search trial rides the forward spectrum for
+# the regularization energy instead of paying a dedicated fwd+inv pair)
+from repro.core.planner import make_plan
+
+def trial_parseval(vv):
+    jval, _ = obj.evaluate_objective(vv, prob, ops, ctx.interp)
+    return jval
+
+def trial_composed(vv):
+    reg = 0.5 * grid.inner(vv, ops.reg_apply(vv, prob.beta))
+    plan = make_plan(vv, grid, ops, prob.n_t, prob.incompressible, ctx.interp,
+                     adjoint=False)
+    rho1 = semilag.transport_state(prob.rho_T, plan, ctx.interp)[-1]
+    return 0.5 * grid.inner(rho1 - prob.rho_R, rho1 - prob.rho_R) + reg
+
+c_tp, c_tc = compiled(trial_parseval, v), compiled(trial_composed, v)
+err_trial = abs(float(c_tp(v)) - float(c_tc(v))) / max(abs(float(c_tc(v))), 1.0)
 
 rec = {{
     "mesh_shape": [2, 4],
     "grid": list(grid.shape),
     "n_t": n_t,
     "batch": B,
+    "armijo_trial": {{
+        "a2a_parseval": count_a2a(c_tp),
+        "a2a_composed": count_a2a(c_tc),
+        "parseval_s": time_fn(c_tp, v),
+        "composed_s": time_fn(c_tc, v),
+        "rel_err": err_trial,
+    }},
+    "chunk_winner": {{
+        "label": winner_row["label"],
+        "a2a_count": winner_row["a2a_count"],
+        "auto_chunk_target_bytes": AUTO_CHUNK_TARGET_BYTES,
+        "auto_resolved_fields": resolve_chunk("auto", grid.shape, 2, 4),
+        "cache_path": cache.path,
+    }},
     "all_to_alls": {{
         "gn_matvec_coalesced": count_a2a(c_co),
         "gn_matvec_composed": count_a2a(c_cm),
@@ -236,7 +297,16 @@ def main(out: str | None = None):
     )
     for row in m["chunks"]:
         emit(f"fft/mesh_chunk_{row['label']}", row["roundtrip_s"] * 1e6,
-             f"chunk={row['chunk']};err={row['fwd_max_err']:.1e}")
+             f"chunk={row['chunk']};a2a={row.get('a2a_count', '?')};"
+             f"err={row['fwd_max_err']:.1e}")
+    cw = m["chunk_winner"]
+    emit("fft/mesh_chunk_winner", 0.0,
+         f"label={cw['label']};a2a={cw['a2a_count']};"
+         f"auto_fields={cw['auto_resolved_fields']};cache={cw['cache_path']}")
+    at = m["armijo_trial"]
+    emit("fft/mesh_armijo_trial", at["parseval_s"] * 1e6,
+         f"composed={at['composed_s']*1e6:.0f}us;"
+         f"a2a={at['a2a_parseval']}/{at['a2a_composed']}")
     sd = rec["single_device"]
     emit(
         f"fft/local_N{sd['n']}",
@@ -253,6 +323,9 @@ def main(out: str | None = None):
     for row in m["chunks"]:
         assert row["fwd_max_err"] < 1e-3, row
     assert sd["max_err"] < 1e-3, sd
+    # ISSUE 8: the Parseval trial saves at least one full transform ride
+    assert at["a2a_composed"] - at["a2a_parseval"] >= 2, at
+    assert at["rel_err"] < 1e-4, at
     print(f"# wrote {out}")
 
 

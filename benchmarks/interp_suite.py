@@ -9,7 +9,12 @@ Writes ``BENCH_interp.json`` at the repo root (structure pinned by
   ONE batched ``tricubic_displace_many`` call vs the planned
   ``interp_apply`` against a prebuilt ``InterpPlan``, plus the plan build
   cost itself (paid once per Newton iteration, amortized over every
-  transport + PCG matvec).
+  transport + PCG matvec).  Each row also measures the bf16-packed plan
+  apply (``planned_bf16_s`` + its relative error vs the f32 plan) and,
+  where available, the batched Pallas kernel (``pallas_batched_s``:
+  compiled natively on TPU, interpret mode elsewhere at N <= 32 —
+  ``pallas_mode`` records which; pinned by ``tests/test_interp_plan.py::
+  test_bench_interp_record_bf16_and_pallas_columns``).
 * ``mesh`` — an 8-device pencil-mesh subprocess: wall times AND the
   **counted** ``collective_permute`` ops in the lowered program — the
   batched path issues one ghost-exchange sequence per call regardless of
@@ -91,16 +96,25 @@ print(json.dumps(rec))
 
 
 def _single_device(sizes, channels=(3, 4)) -> list[dict]:
+    from repro.kernels import tricubic
+
     rng = np.random.default_rng(0)
     rows = []
     # 5-sample medians at the sizes the record test pins: the batched-vs-
     # looped gap is real but O(10-30%), so keep regeneration noise below it
     iters = {"iters": 5}
+    # the Pallas kernel compiles natively on TPU; elsewhere it runs in
+    # interpret mode — correct but slow, so measure it at small N only
+    on_tpu = jax.default_backend() == "tpu"
     for n in sizes:
         d = jnp.asarray(rng.uniform(-3, 3, (3, n, n, n)), jnp.float32)
         single = jax.jit(lambda ff, dd: ref.tricubic_displace(ff, dd))
         plan_build = jax.jit(ref.make_interp_plan)
+        plan_build_bf16 = jax.jit(
+            lambda dd: ref.make_interp_plan(dd, dtype=jnp.bfloat16)
+        )
         plan = plan_build(d)
+        plan_bf16 = plan_build_bf16(d)
         f1 = jnp.asarray(rng.standard_normal((n, n, n)), jnp.float32)
         single_s = time_fn(single, f1, d)
         plan_build_s = time_fn(plan_build, d)
@@ -113,17 +127,39 @@ def _single_device(sizes, channels=(3, 4)) -> list[dict]:
             )
             batched = jax.jit(ref.tricubic_displace_many)
             planned = jax.jit(ref.interp_apply)
-            rows.append(
-                {
-                    "n": n,
-                    "c": c,
-                    "single_s": single_s,
-                    "looped_s": time_fn(looped, f, d, **iters),
-                    "batched_s": time_fn(batched, f, d, **iters),
-                    "planned_s": time_fn(planned, f, plan, **iters),
-                    "plan_build_s": plan_build_s,
-                }
+            ref_out = planned(f, plan)
+            bf16_out = planned(f, plan_bf16)
+            bf16_rel_err = float(
+                jnp.max(jnp.abs(bf16_out - ref_out)) / jnp.max(jnp.abs(ref_out))
             )
+            row = {
+                "n": n,
+                "c": c,
+                "single_s": single_s,
+                "looped_s": time_fn(looped, f, d, **iters),
+                "batched_s": time_fn(batched, f, d, **iters),
+                "planned_s": time_fn(planned, f, plan, **iters),
+                "planned_bf16_s": time_fn(planned, f, plan_bf16, **iters),
+                "planned_bf16_rel_err": bf16_rel_err,
+                "plan_build_s": plan_build_s,
+            }
+            if on_tpu or n <= 32:
+                tile = (8, 8, min(32, n))
+                pallas = jax.jit(
+                    lambda ff, dd: tricubic.tricubic_displace_pallas_many(
+                        ff, dd, tile=tile, interpret=not on_tpu
+                    )
+                )
+                pallas_out = pallas(f, d)
+                row["pallas_batched_s"] = time_fn(
+                    pallas, f, d, iters=5 if on_tpu else 3
+                )
+                row["pallas_mode"] = "tpu" if on_tpu else "interpret"
+                row["pallas_rel_err"] = float(
+                    jnp.max(jnp.abs(pallas_out - batched(f, d)))
+                    / jnp.max(jnp.abs(ref_out))
+                )
+            rows.append(row)
     return rows
 
 
@@ -158,12 +194,19 @@ def main(out: str | None = None):
     rec = measure(toy=toy)
     write_record(rec, out)
     for r in rec["single_device"]:
+        extra = ""
+        if "pallas_batched_s" in r:
+            extra = (
+                f";pallas={r['pallas_batched_s']*1e6:.0f}us"
+                f"({r['pallas_mode']})"
+            )
         emit(
             f"interp/N{r['n']}_C{r['c']}",
             r["batched_s"] * 1e6,
             f"looped={r['looped_s']*1e6:.0f}us;planned={r['planned_s']*1e6:.0f}us;"
+            f"planned_bf16={r['planned_bf16_s']*1e6:.0f}us;"
             f"speedup={r['looped_s']/r['batched_s']:.2f}x;"
-            f"planned_speedup={r['looped_s']/r['planned_s']:.2f}x",
+            f"planned_speedup={r['looped_s']/r['planned_s']:.2f}x" + extra,
         )
     m = rec["mesh"]
     cp = m["collective_permutes"]

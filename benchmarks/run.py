@@ -16,6 +16,7 @@ import traceback
 from repro import telemetry
 
 from benchmarks import (
+    autotune_suite,
     cohort_suite,
     fft_suite,
     interp_suite,
@@ -37,6 +38,7 @@ TABLES = {
     "lm_roofline": lm_roofline.main,
     "multilevel": multilevel_c2f.main,
     "cohort": cohort_suite.main,
+    "autotune": autotune_suite.main,
 }
 
 

@@ -26,6 +26,12 @@ bash scripts/smoke.sh
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.analysis.trace_report --validate results/smoke_trace.jsonl > /dev/null
 
+# autotune cache gate: the tuning cache the smoke sweep just wrote (and any
+# cache a developer committed by mistake) must pass the schema/knob
+# allowlist — a corrupt or stale cache is a silent perf bug, not a crash
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.autotune --validate
+
 if [[ -n "${CI_SLOW:-}" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m pytest -q -m slow

@@ -35,6 +35,12 @@ BENCH_ML_TOY=1 python -m benchmarks.run --suite multilevel
 # writes results/BENCH_cohort_toy.json (gitignored)
 BENCH_COHORT_TOY=1 python -m benchmarks.run --suite cohort
 
+# toy-size autotune sweep: two 2-cell coordinate-descent sweeps on an
+# 8-host-device 2x4 mesh, then a second pass that must resolve every cell
+# from the tuning cache without re-sweeping — writes
+# results/autotune_toy.json (gitignored)
+BENCH_AUTOTUNE_TOY=1 python -m benchmarks.run --suite autotune
+
 # telemetry trace (ISSUE 7): the 2-level registration below and a toy
 # 6-job/3-slot serve session both write results/smoke_trace.jsonl; the
 # trace_report CLI renders it and ci.sh schema-validates every record

@@ -1,0 +1,261 @@
+"""Persistent tuning cache: JSON winners keyed by (grid, devices, beta) cell.
+
+The cache is the contract between the sweep driver (``repro.autotune.search``
+/ ``benchmarks/autotune_suite.py``) and the consumers that consult it by
+default (``DistContext``, ``GNConfig``-driven solvers, ``register``):
+
+* one file (``results/autotune_cache.json`` unless ``REPRO_AUTOTUNE_CACHE``
+  points elsewhere — the repo gitignores the default path so committed
+  winners can never silently change solver behavior on another machine),
+* top-level ``schema`` pin plus a per-entry ``knobs_rev`` pin: bump
+  ``KNOBS_REV`` whenever a knob's meaning changes and every stale entry
+  degrades to "no entry" instead of mis-tuning a new build,
+* a hard allowlist on knob names AND values: an entry that names an unknown
+  knob, an out-of-range chunk, or a dtype outside {float32, bfloat16} is
+  rejected wholesale (``telemetry.counter("autotune.cache_invalid")`` with a
+  ``reason`` attribute counts every rejection class, pinned by
+  ``tests/test_autotune.py``),
+* counted-mode entries (winners chosen by deterministic collective
+  counts/bytes on CPU hosts) never apply the dtype knobs on resolve: halved
+  payload bytes make bf16 win every counted comparison by construction, so
+  only a wall-clock-measured entry may flip numerics-adjacent knobs.
+
+This module deliberately imports nothing but the stdlib and
+``repro.telemetry`` — ``core/gauss_newton.py`` and ``dist/context.py``
+consult it lazily without creating an import cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+from repro import telemetry
+
+SCHEMA_VERSION = 1
+# bump when a knob's semantics change: stale entries then fall back to
+# defaults (counted as reason="knobs_rev") instead of mis-applying
+KNOBS_REV = 1
+
+ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+DEFAULT_CACHE = os.path.join("results", "autotune_cache.json")
+
+COUNTER_INVALID = "autotune.cache_invalid"
+COUNTER_HIT = "autotune.cache_hit"
+COUNTER_MISS = "autotune.cache_miss"
+
+_VALID_INTERP = ("ref", "pallas", "auto")
+_VALID_DTYPES = ("float32", "bfloat16")
+_VALID_PRECOND = ("spectral", "two_level", "vcycle")
+_VALID_MODES = ("counted", "wall")
+# knobs a cache entry may carry; anything else rejects the entry
+KNOB_NAMES = ("chunk", "interp_method", "plan_dtype", "field_dtype", "precond")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One cell's winning knob set.  ``None`` = knob not tuned (keep the
+    consumer's default).  ``mode`` records how the winner was measured:
+    ``"wall"`` (real devices, median wall time) or ``"counted"``
+    (deterministic collective count/byte cost model — the CI-hermetic
+    fallback).  ``precond`` is advisory: the preconditioner is a callable
+    argument of ``gn.solve``, so the resolver reports the winner (and the
+    bench records it) but never injects it."""
+
+    chunk: int | str | None = None
+    interp_method: str | None = None
+    plan_dtype: str | None = None
+    field_dtype: str | None = None
+    precond: str | None = None
+    mode: str = "counted"
+    cost: float | None = None
+    knobs_rev: int = KNOBS_REV
+
+    def knobs(self) -> dict:
+        return {k: getattr(self, k) for k in KNOB_NAMES if getattr(self, k) is not None}
+
+
+def cell_key(shape, ndev: int, beta: float | None = None) -> str:
+    """``"N1xN2xN3/Ddev/beta-<g>"`` — same cell naming as the dry-run
+    planner records; ``beta=None`` gives the beta-agnostic key."""
+    dims = "x".join(str(int(n)) for n in shape)
+    b = "any" if beta is None else format(float(beta), "g")
+    return f"{dims}/{int(ndev)}dev/beta-{b}"
+
+
+def _check_knobs(entry: dict) -> str | None:
+    """Allowlist guard.  Returns a rejection reason or None when valid."""
+    for name in entry.get("knobs", {}):
+        if name not in KNOB_NAMES:
+            return f"unknown_knob:{name}"
+    knobs = entry.get("knobs", {})
+    chunk = knobs.get("chunk")
+    if chunk is not None and chunk != "auto":
+        if not isinstance(chunk, int) or isinstance(chunk, bool) or chunk < 1:
+            return "invalid_chunk"
+    im = knobs.get("interp_method")
+    if im is not None and im not in _VALID_INTERP:
+        return "invalid_interp_method"
+    for dk in ("plan_dtype", "field_dtype"):
+        dt = knobs.get(dk)
+        if dt is not None and dt not in _VALID_DTYPES:
+            return f"invalid_{dk}"
+    pc = knobs.get("precond")
+    if pc is not None and pc not in _VALID_PRECOND:
+        return "invalid_precond"
+    if entry.get("mode", "counted") not in _VALID_MODES:
+        return "invalid_mode"
+    return None
+
+
+def default_cache_path() -> str:
+    return os.environ.get(ENV_CACHE) or DEFAULT_CACHE
+
+
+class TuningCache:
+    """Load/store tuned winners.  Every failure mode degrades to "no entry"
+    with a counted telemetry event — a corrupt or hostile cache file can
+    slow a run down (defaults) but never crash or mis-tune it."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+
+    # -- IO ----------------------------------------------------------------
+    def load(self) -> dict:
+        if not os.path.exists(self.path):
+            return {}
+        try:
+            with open(self.path) as fh:
+                raw = json.load(fh)
+        except (OSError, ValueError):
+            telemetry.counter(COUNTER_INVALID, reason="corrupt", path=self.path)
+            return {}
+        if not isinstance(raw, dict) or not isinstance(raw.get("cells"), dict):
+            telemetry.counter(COUNTER_INVALID, reason="malformed", path=self.path)
+            return {}
+        if raw.get("schema") != SCHEMA_VERSION:
+            telemetry.counter(
+                COUNTER_INVALID, reason="schema", found=raw.get("schema"), path=self.path
+            )
+            return {}
+        return raw["cells"]
+
+    def _write(self, cells: dict) -> None:
+        payload = {"schema": SCHEMA_VERSION, "cells": cells}
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        os.replace(tmp, self.path)
+
+    # -- entries -----------------------------------------------------------
+    def get(self, cell: str) -> TunedConfig | None:
+        entry = self.load().get(cell)
+        if entry is None:
+            return None
+        if not isinstance(entry, dict):
+            telemetry.counter(COUNTER_INVALID, reason="malformed_entry", cell=cell)
+            return None
+        if entry.get("knobs_rev") != KNOBS_REV:
+            telemetry.counter(
+                COUNTER_INVALID, reason="knobs_rev", cell=cell, found=entry.get("knobs_rev")
+            )
+            return None
+        reason = _check_knobs(entry)
+        if reason is not None:
+            telemetry.counter(COUNTER_INVALID, reason=reason, cell=cell)
+            return None
+        knobs = entry.get("knobs", {})
+        return TunedConfig(
+            chunk=knobs.get("chunk"),
+            interp_method=knobs.get("interp_method"),
+            plan_dtype=knobs.get("plan_dtype"),
+            field_dtype=knobs.get("field_dtype"),
+            precond=knobs.get("precond"),
+            mode=entry.get("mode", "counted"),
+            cost=entry.get("cost"),
+            knobs_rev=KNOBS_REV,
+        )
+
+    def put(self, cell: str, tuned: TunedConfig) -> None:
+        entry = {
+            "knobs": tuned.knobs(),
+            "mode": tuned.mode,
+            "cost": tuned.cost,
+            "knobs_rev": tuned.knobs_rev,
+        }
+        reason = _check_knobs(entry)
+        if reason is not None:
+            raise ValueError(f"refusing to store invalid tuning entry for {cell}: {reason}")
+        cells = self.load()
+        cells[cell] = entry
+        self._write(cells)
+
+    # -- validation (ci.sh) -------------------------------------------------
+    def validate(self) -> list[str]:
+        """Schema problems as human-readable strings; [] == valid (a missing
+        file is valid — the cache is optional by design)."""
+        if not os.path.exists(self.path):
+            return []
+        try:
+            with open(self.path) as fh:
+                raw = json.load(fh)
+        except (OSError, ValueError) as e:
+            return [f"unreadable JSON: {e}"]
+        problems = []
+        if not isinstance(raw, dict):
+            return ["top level is not an object"]
+        if raw.get("schema") != SCHEMA_VERSION:
+            problems.append(f"schema {raw.get('schema')!r} != {SCHEMA_VERSION}")
+        cells = raw.get("cells")
+        if not isinstance(cells, dict):
+            return problems + ["'cells' is not an object"]
+        for cell, entry in cells.items():
+            if not isinstance(entry, dict):
+                problems.append(f"{cell}: entry is not an object")
+                continue
+            if entry.get("knobs_rev") != KNOBS_REV:
+                problems.append(f"{cell}: knobs_rev {entry.get('knobs_rev')!r} != {KNOBS_REV}")
+            reason = _check_knobs(entry)
+            if reason is not None:
+                problems.append(f"{cell}: {reason}")
+        return problems
+
+
+def resolve_tuned(
+    shape,
+    ndev: int,
+    beta: float | None = None,
+    path: str | None = None,
+) -> TunedConfig | None:
+    """Look up the winning knob set for a cell: exact-beta entry first, the
+    beta-agnostic entry as fallback.  Counted-mode entries come back with
+    the dtype knobs stripped (see module docstring)."""
+    cache = TuningCache(path)
+    tuned = cache.get(cell_key(shape, ndev, beta))
+    if tuned is None and beta is not None:
+        tuned = cache.get(cell_key(shape, ndev, None))
+    if tuned is None:
+        telemetry.counter(COUNTER_MISS, cell=cell_key(shape, ndev, beta))
+        return None
+    if tuned.mode == "counted" and (tuned.plan_dtype or tuned.field_dtype):
+        tuned = dataclasses.replace(tuned, plan_dtype=None, field_dtype=None)
+    telemetry.counter(COUNTER_HIT, cell=cell_key(shape, ndev, beta))
+    return tuned
+
+
+def tuned_replace(cfg: Any, tuned: TunedConfig, defaults: dict) -> Any:
+    """Dataclass-replace every field of ``cfg`` named in ``defaults`` that is
+    (a) still at its default sentinel and (b) tuned (non-None in ``tuned``).
+    Explicitly-set knobs always win over the cache."""
+    updates = {}
+    for field, default in defaults.items():
+        if getattr(cfg, field) == default:
+            val = getattr(tuned, field, None)
+            if val is not None:
+                updates[field] = val
+    return dataclasses.replace(cfg, **updates) if updates else cfg

@@ -1,0 +1,71 @@
+"""Candidate measurement: wall clock where real devices exist, deterministic
+counted cost everywhere else.
+
+Two regimes, picked by ``measure_mode()``:
+
+* ``"wall"`` — on GPU/TPU backends a candidate is scored by the median of
+  ``repeats`` timed executions of its compiled program (one untimed warmup,
+  ``block_until_ready`` inside the clock), wrapped in a telemetry span so a
+  JSONL trace records every trial.
+* ``"counted"`` — on CPU hosts (CI, the forced-host-device benchmark
+  subprocesses) wall time of emulated collectives is noise, so the score is
+  a deterministic cost model over the compiled program's collectives:
+
+      cost = sum_kinds count * LATENCY_WEIGHT + total_bytes / BYTES_SCALE
+
+  i.e. one unit per collective launch (latency/dispatch) plus one unit per
+  ``AUTO_CHUNK_TARGET_BYTES`` of payload (bandwidth).  Identical inputs give
+  identical costs on every machine — counted sweeps are reproducible and
+  their winners are pinned by tests, which is exactly why the resolver
+  refuses to apply dtype knobs from counted entries (halved payloads win
+  the byte term by construction, not by measurement).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro import telemetry
+
+# cost-model constants (counted mode).  LATENCY_WEIGHT is per collective
+# launch; BYTES_SCALE normalizes payload bytes to the pipelined-FFT chunk
+# target so one "full chunk" of traffic costs about one launch.
+LATENCY_WEIGHT = 1.0
+BYTES_SCALE = float(8 << 20)  # == repro.dist.pencil_fft.AUTO_CHUNK_TARGET_BYTES
+
+
+def measure_mode() -> str:
+    """``"wall"`` on real accelerators, ``"counted"`` on CPU hosts."""
+    import jax
+
+    return "wall" if jax.default_backend() in ("gpu", "tpu") else "counted"
+
+
+def counted_cost(obj) -> float:
+    """Deterministic cost of a compiled/lowered program (see module doc)."""
+    coll = telemetry.count_collectives(obj)
+    launches = coll.get("total_count", 0)
+    total_bytes = coll.get("total_bytes", 0)
+    return launches * LATENCY_WEIGHT + total_bytes / BYTES_SCALE
+
+
+def wall_cost(fn, *args, repeats: int = 3) -> float:
+    """Median wall seconds of ``fn(*args)`` with warmup + device sync."""
+    import jax
+
+    jax.block_until_ready(fn(*args))  # warmup / compile
+    times = []
+    for i in range(repeats):
+        with telemetry.span("autotune.trial", repeat=i):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            times.append(time.perf_counter() - t0)
+    return statistics.median(times)
+
+
+def measure_candidate(compiled, args, mode: str | None = None, repeats: int = 3) -> float:
+    """Score one candidate program: counted cost or median wall time."""
+    mode = mode or measure_mode()
+    if mode == "counted":
+        return counted_cost(compiled)
+    return wall_cost(compiled, *args, repeats=repeats)

@@ -46,6 +46,18 @@ class GNConfig:
     # explicit interp= (the distributed path) carries its own setting via
     # DistContext(plan_dtype=...) / make_halo_interp(plan_dtype=...).
     plan_dtype: str | None = None
+    # e.g. "bfloat16": storage dtype of the transport/FFT field path (the
+    # SL-transported stacks and every real field the spectral operators
+    # return).  Applies to the SpectralOps this solver builds itself; an
+    # explicit ops= carries its own via SpectralOps(field_dtype=...) /
+    # DistContext(field_dtype=...).  Critical accumulations stay >= f32:
+    # inner products (grid.inner), the time quadrature, the k-space
+    # scalings, and the PCG recursion (guarded in newton_iteration).
+    field_dtype: str | None = None
+    # tuning-cache consult for the perf knobs above: "cache" fills knobs
+    # still at their defaults from the repro.autotune cache (missing cache
+    # == no-op), "off" disables, "sweep" additionally sweeps on a miss.
+    autotune: str = "cache"
     # DEPRECATED no-op: the transform-coalesced hot path (SpectralBatch +
     # fused k-space assemblies in core/objective.py) is now unconditional
     # and numerically identical to the old fused=True routing.  Setting it
@@ -179,6 +191,22 @@ def pcg_masked(
     return PCGResult(x=x, iters=iters, rel_res=rel)
 
 
+def _tuned_cfg(cfg: GNConfig, grid: Grid, ops) -> GNConfig:
+    """Fill still-at-default perf knobs of ``cfg`` from the tuning cache.
+
+    No-op when ``cfg.autotune == "off"``, when the cache has no entry for
+    this ``(grid, devices, beta)`` cell, or when every knob was set
+    explicitly (an explicit value always wins — the resolver only touches
+    knobs still at their dataclass defaults).  Lazy import keeps
+    ``repro.autotune`` out of the core dependency graph.
+    """
+    if cfg.autotune == "off":
+        return cfg
+    from repro import autotune
+
+    return autotune.consult_gn(cfg, grid, ops)
+
+
 def _interp_fn(cfg: GNConfig):
     from repro.kernels import ops as kops
 
@@ -244,19 +272,32 @@ def newton_iteration(
 
     precond = spectral_precond if precond is None else precond(state, prob)
 
+    # Critical-accumulation guard: the PCG recursion runs in >= f32 even when
+    # ``field_dtype`` stores fields in bf16.  Casting the rhs and the
+    # preconditioner output (z0 seeds p0) up to ``ct`` keeps x/r/p/rz wide for
+    # the whole while_loop — JAX promotion then absorbs any bf16 matvec output
+    # into f32 updates — while matvec/precond internals keep the cheap
+    # storage dtype for their transform rides.
+    ct = jnp.promote_types(v.dtype, jnp.float32)
+    base_precond = precond
+
+    def wide_precond(r):
+        return base_precond(r).astype(ct)
+
     eta = jnp.minimum(cfg.eta_max, jnp.sqrt(gnorm / jnp.maximum(g0_forcing, 1e-30)))
     rhs = -state.g
     if prob.incompressible:
         rhs = ops.leray(rhs)
-    sol = pcg(matvec, rhs, precond, grid.inner, eta, cfg.max_cg)
+    rhs = rhs.astype(ct)
+    sol = pcg(matvec, rhs, wide_precond, grid.inner, eta, cfg.max_cg)
     dv = sol.x
     if prob.incompressible:
-        dv = ops.leray(dv)
+        dv = ops.leray(dv).astype(ct)
 
     # ---- Armijo backtracking on J
     gdv = grid.inner(state.g, dv)
     # fall back to steepest descent if PCG returned a non-descent direction
-    dv = jnp.where(gdv < 0, dv, -spectral_precond(state.g))
+    dv = jnp.where(gdv < 0, dv, -spectral_precond(state.g).astype(ct))
     gdv = jnp.minimum(gdv, grid.inner(state.g, dv))
 
     def j_of(vv):
@@ -321,7 +362,8 @@ def solve(
     so warm stages keep loose inner solves rather than inheriting the tight
     ``gnorm/g0_ref`` ratio and over-solving PCG.
     """
-    ops = ops or SpectralOps(grid)
+    cfg = _tuned_cfg(cfg, grid, ops)
+    ops = ops or SpectralOps(grid, field_dtype=cfg.field_dtype)
     v = v0 if v0 is not None else jnp.zeros((3,) + grid.shape, grid.dtype)
     interp = interp or _interp_fn(cfg)
 
@@ -465,18 +507,25 @@ def newton_iteration_cohort(
     def spectral_precond(r):
         return ops.precond_project(r, prob.beta, prob.incompressible)
 
+    # >= f32 PCG recursion guard — same rationale as ``newton_iteration``
+    ct = jnp.promote_types(v.dtype, jnp.float32)
+
+    def wide_precond(r):
+        return spectral_precond(r).astype(ct)
+
     eta = jnp.minimum(cfg.eta_max, jnp.sqrt(gnorm / jnp.maximum(g0_forcing, 1e-30)))
     rhs = -state.g
     if prob.incompressible:
         rhs = ops.leray(rhs)
-    sol = pcg_masked(matvec, rhs, spectral_precond, grid.inner_per, eta, cfg.max_cg, active)
+    rhs = rhs.astype(ct)
+    sol = pcg_masked(matvec, rhs, wide_precond, grid.inner_per, eta, cfg.max_cg, active)
     dv = sol.x
     if prob.incompressible:
-        dv = ops.leray(dv)
+        dv = ops.leray(dv).astype(ct)
 
     # per-subject steepest-descent safeguard
     gdv = grid.inner_per(state.g, dv)
-    dv = jnp.where(bc(gdv < 0), dv, -spectral_precond(state.g))
+    dv = jnp.where(bc(gdv < 0), dv, -spectral_precond(state.g).astype(ct))
     gdv = jnp.minimum(gdv, grid.inner_per(state.g, dv))
 
     def j_of(vv):
@@ -562,7 +611,8 @@ def make_cohort_step(grid: Grid, cfg: GNConfig, ops: SpectralOps | None = None, 
         raise NotImplementedError(
             "cohort solves support the Gauss-Newton Hessian only (cfg.gauss_newton=True)"
         )
-    ops = ops or SpectralOps(grid)
+    cfg = _tuned_cfg(cfg, grid, ops)
+    ops = ops or SpectralOps(grid, field_dtype=cfg.field_dtype)
     interp = interp or _interp_fn(cfg)
     return jax.jit(partial(_cohort_step, grid=grid, cfg=cfg, ops=ops, interp=interp))
 

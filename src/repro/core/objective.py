@@ -22,8 +22,15 @@ round trip below rides a ``SpectralOps.batch()`` or an explicitly fused
 k-space combine, so the per-stage transform count is minimal:
 
 * ``newton_state`` stage A — ``div v`` (compressible), ``beta Lap^2 v``,
-  and ``Lap v`` (the regularization energy) all depend only on ``v``:
-  one coalesced ride pair instead of three.
+  and the regularization energy all depend only on ``v``: one coalesced
+  ride pair instead of three, with the energy read off the shared forward
+  spectrum by Parseval (``SpectralBatch.reg_energy`` — it joins no
+  inverse ride at all).
+* ``evaluate_objective`` (every Armijo trial) — the energy is the same
+  spectrum-side reduction, so a trial costs one forward of ``v`` (shared
+  with ``div v`` when compressible) and ZERO inverse transforms — one
+  ride pair fewer than the eager ``reg_energy`` composition (pinned in
+  ``tests/test_coalesce.py``).
 * the gradient assembly — ``g = beta Lap^2 v + P b`` reuses stage A's
   ``beta Lap^2 v``; only ``P b`` costs a ride (none when compressible).
 * ``gn_hessian_matvec`` — ``beta Lap^2 vt + P bt`` is ONE ride pair
@@ -102,15 +109,25 @@ def evaluate_objective(
 
     Cohort inputs (``v (S,3,N..)``) return per-subject ``(S,)`` values."""
     cohort = v.ndim == 5
+    fd = getattr(ops, "field_dtype", None)
+    # Parseval lever: the regularization energy is a spectrum-side reduction
+    # on the forward spectrum of v, and (compressible) shares that ONE
+    # forward ride with div v for the plan — an Armijo trial pays no
+    # dedicated forward/inverse pair for the energy (a2a-pinned by
+    # tests/test_coalesce.py).
+    with ops.batch() as sb:
+        h_reg = sb.reg_energy(v, prob.beta)
+        h_div = sb.div(v) if (plan is None and not prob.incompressible) else None
     if plan is None:
         # forward-only plan: line-search trials never transport backward
         plan = make_plan(
-            v, prob.grid, ops, prob.n_t, prob.incompressible, interp, adjoint=False
+            v, prob.grid, ops, prob.n_t, prob.incompressible, interp, adjoint=False,
+            divv=None if h_div is None else h_div.get(),
         )
-    rho_series = semilag.transport_state(prob.rho_T, plan, interp)
+    rho_series = semilag.transport_state(prob.rho_T, plan, interp, field_dtype=fd)
     rho1 = rho_series[-1]
     misfit = 0.5 * _norm_sq(prob.grid, rho1 - prob.rho_R, cohort)
-    reg = ops.reg_energy(v, prob.beta)
+    reg = h_reg.get()
     return misfit + reg, (misfit, reg, rho_series, plan)
 
 
@@ -127,20 +144,25 @@ def newton_state(
     inputs (``v (S,3,N..)``) share all of those rides across subjects.
     """
     cohort = v.ndim == 5
-    # ---- stage A: one ride pair for every v-only spectral op
+    fd = getattr(ops, "field_dtype", None)
+    # ---- stage A: one ride pair for every v-only spectral op; the
+    # regularization energy rides the same forward as a spectrum-side
+    # Parseval reduction (no Lap v inverse — 3 fewer inverse fields)
     with ops.batch() as sb:
         h_divv = None if prob.incompressible else sb.div(v)
         h_regv = sb.reg_apply(v, prob.beta)
-        h_lapv = sb.laplacian(v)
+        h_reg_e = sb.reg_energy(v, prob.beta)
     plan = make_plan(
         v, prob.grid, ops, prob.n_t, prob.incompressible, interp,
         divv=None if h_divv is None else h_divv.get(),
     )
-    rho_series = semilag.transport_state(prob.rho_T, plan, interp)
+    rho_series = semilag.transport_state(prob.rho_T, plan, interp, field_dtype=fd)
     rho1 = rho_series[-1]
 
     # adjoint terminal condition lam(1) = rho_R - rho(1)   (eq. 3)
-    lam_series = semilag.transport_adjoint(prob.rho_R - rho1, plan, interp)
+    lam_series = semilag.transport_adjoint(
+        prob.rho_R - rho1, plan, interp, field_dtype=fd
+    )
 
     # cache grad rho(t_k): ONE batched spectral gradient over all slices
     # (leading dims pass through both FFT backends; no vmap-of-shard_map);
@@ -155,7 +177,7 @@ def newton_state(
     g = h_regv.get() + _project(ops, b, prob.incompressible)
 
     misfit = 0.5 * _norm_sq(prob.grid, rho1 - prob.rho_R, cohort)
-    reg = 0.5 * prob.beta * _norm_sq(prob.grid, h_lapv.get(), cohort)
+    reg = h_reg_e.get()
     return NewtonState(
         v=v,
         plan=plan,

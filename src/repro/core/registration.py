@@ -66,7 +66,11 @@ def register(
     if ctx is not None:
         ops = ops or ctx.ops
         interp = interp or ctx.interp
-    ops = ops or SpectralOps(grid)
+    # resolve tuned perf knobs ONCE up front (idempotent — gn.solve would
+    # re-consult to the same values) so the ops built here for presmoothing
+    # and diagnostics carry the same field_dtype as the solve itself
+    config = dataclasses.replace(config, solver=gn._tuned_cfg(config.solver, grid, ops))
+    ops = ops or SpectralOps(grid, field_dtype=config.solver.field_dtype)
 
     rho_R_raw, rho_T_raw = rho_R, rho_T
     if config.presmooth:

@@ -77,8 +77,19 @@ def _bind_adj(plan: SLPlan, interp):
 # --------------------------------------------------------------------------- #
 # state equation (2b): pure advection, forward in time
 # --------------------------------------------------------------------------- #
-def transport_state(rho0: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
-    """Solve d_t rho + v.grad rho = 0; returns all slices (n_t+1, N1,N2,N3)."""
+def transport_state(
+    rho0: jnp.ndarray, plan: SLPlan, interp=None, field_dtype=None
+) -> jnp.ndarray:
+    """Solve d_t rho + v.grad rho = 0; returns all slices (n_t+1, N1,N2,N3).
+
+    ``field_dtype`` (e.g. ``jnp.bfloat16``) selects the storage dtype of the
+    transported stack: the initial condition is cast once and every slice
+    inherits it (the planned interpolation applies in >= f32 and casts back
+    to the field dtype — ``kernels/ref.py``), halving the series' footprint
+    and the ghost-exchange bytes of each step on a mesh.
+    """
+    if field_dtype is not None:
+        rho0 = rho0.astype(field_dtype)
     at_fwd = _bind_fwd(plan, interp)
 
     def step(rho, _):
@@ -94,8 +105,15 @@ def transport_state(rho0: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray
 # In tau = 1-t:  d_tau lam + (-v).grad lam = lam div v.
 # Incompressible (div v = 0): pure advection along -v.
 # --------------------------------------------------------------------------- #
-def transport_adjoint(lam1: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarray:
-    """Returns lam at all *t*-slices, index k = t_k (so [..., -1] is t=1)."""
+def transport_adjoint(
+    lam1: jnp.ndarray, plan: SLPlan, interp=None, field_dtype=None
+) -> jnp.ndarray:
+    """Returns lam at all *t*-slices, index k = t_k (so [..., -1] is t=1).
+
+    ``field_dtype``: storage dtype of the adjoint stack (see
+    ``transport_state``)."""
+    if field_dtype is not None:
+        lam1 = lam1.astype(field_dtype)
     at_adj = _bind_adj(plan, interp)
     dt = plan.dt
 
@@ -110,11 +128,12 @@ def transport_adjoint(lam1: jnp.ndarray, plan: SLPlan, interp=None) -> jnp.ndarr
 
         def step(lam, _):
             # lam and lam*divv share one batched interpolation (C=2):
-            # one ghost exchange on a mesh instead of two
+            # one ghost exchange on a mesh instead of two.  The carry keeps
+            # lam's storage dtype even if divv is wider (mixed field_dtype).
             lam0X, f0X = at_adj(jnp.stack([lam, lam * divv]))
             lam_star = lam0X + dt * f0X
             f_star = lam_star * divv
-            nxt = lam0X + 0.5 * dt * (f0X + f_star)
+            nxt = (lam0X + 0.5 * dt * (f0X + f_star)).astype(lam.dtype)
             return nxt, nxt
 
     _, series_tau = jax.lax.scan(step, lam1, None, length=plan.n_t)
@@ -135,7 +154,11 @@ def transport_inc_state(
     """Returns rho~(1) (only the final slice is needed for Gauss-Newton)."""
     at_fwd = _bind_fwd(plan, interp)
     dt = plan.dt
-    rho0 = jnp.zeros_like(grad_rho_series[0][..., 0, :, :, :])
+    # carry in the promoted compute dtype: under bf16 field storage the
+    # source term -v~.grad rho may be wider than the stored series (v~ is
+    # the f32 PCG iterate), and a scan carry must keep one dtype throughout
+    ct = jnp.result_type(vtilde, grad_rho_series)
+    rho0 = jnp.zeros_like(grad_rho_series[0][..., 0, :, :, :], dtype=ct)
 
     def source(k):
         # f(., t_k) = -v~ . grad rho(t_k) on the grid; the component axis
@@ -146,7 +169,7 @@ def transport_inc_state(
         rt = carry
         rt0X, f0X = at_fwd(jnp.stack([rt, source(k)]))  # C=2 batched
         f_star = source(k + 1)
-        nxt = rt0X + 0.5 * dt * (f0X + f_star)
+        nxt = (rt0X + 0.5 * dt * (f0X + f_star)).astype(ct)
         return nxt, None
 
     rho1, _ = jax.lax.scan(step, rho0, jnp.arange(plan.n_t))
@@ -202,7 +225,7 @@ def transport_inc_adjoint_newton(
         lam0X, f0X = at_adj(jnp.stack([lamt, source(lamt, k)]))  # C=2 batched
         lam_star = lam0X + dt * f0X
         f_star = source(lam_star, k - 1)
-        nxt = lam0X + 0.5 * dt * (f0X + f_star)
+        nxt = (lam0X + 0.5 * dt * (f0X + f_star)).astype(lam1.dtype)
         return nxt, nxt
 
     _, series_tau = jax.lax.scan(step, lam1, jnp.arange(n_t))
@@ -217,7 +240,9 @@ def transport_inc_state_series(
     grad rho~(t_k) for the second b~ term)."""
     at_fwd = _bind_fwd(plan, interp)
     dt = plan.dt
-    rho0 = jnp.zeros_like(grad_rho_series[0][..., 0, :, :, :])
+    # promoted-dtype carry: see transport_inc_state
+    ct = jnp.result_type(vtilde, grad_rho_series)
+    rho0 = jnp.zeros_like(grad_rho_series[0][..., 0, :, :, :], dtype=ct)
 
     def source(k):
         return -jnp.sum(vtilde * grad_rho_series[k], axis=-4)
@@ -226,7 +251,7 @@ def transport_inc_state_series(
         rt = carry
         rt0X, f0X = at_fwd(jnp.stack([rt, source(k)]))
         f_star = source(k + 1)
-        nxt = rt0X + 0.5 * dt * (f0X + f_star)
+        nxt = (rt0X + 0.5 * dt * (f0X + f_star)).astype(ct)
         return nxt, nxt
 
     _, series = jax.lax.scan(step, rho0, jnp.arange(plan.n_t))
@@ -243,6 +268,12 @@ def time_integral_b(lam_series: jnp.ndarray, grad_rho_series: jnp.ndarray, dt: f
     the per-subject stack (S, 3, N..)."""
     n = lam_series.shape[0]
     w = jnp.full((n,), dt, dtype=jnp.float32).at[0].mul(0.5).at[-1].mul(0.5)
+    # critical accumulation: the time quadrature sums n_t+1 products, so
+    # bf16-stored series (SpectralOps field_dtype) are upcast and the
+    # contraction runs in >= f32 regardless of the storage dtype
+    acc = jnp.promote_types(jnp.result_type(lam_series, grad_rho_series), jnp.float32)
+    lam_series = lam_series.astype(acc)
+    grad_rho_series = grad_rho_series.astype(acc)
     if lam_series.ndim == 5:  # cohort
         return jnp.einsum("t,tsxyz,tscxyz->scxyz", w, lam_series, grad_rho_series)
     return jnp.einsum("t,txyz,tcxyz->cxyz", w, lam_series, grad_rho_series)

@@ -96,8 +96,20 @@ class LocalFFT:
         self.kd = (d1.astype(f32), d2.astype(f32), d3.astype(f32))
         self.ksq = (k1**2 + k2**2 + k3**2).astype(f32)
         self.ksq_d = (d1**2 + d2**2 + d3**2).astype(f32)
+        # Parseval weight of each stored rfft mode: the half-spectrum drops
+        # the conjugate partner of every 0 < k3 < N3/2 mode, so those count
+        # twice in sum_k |U(k)|^2; k3 = 0 and the (even-N3) Nyquist plane
+        # are self-conjugate and count once.
+        n3 = grid.shape[2]
+        w = np.full(n3 // 2 + 1, 2.0, f32)
+        w[0] = 1.0
+        if n3 % 2 == 0:
+            w[-1] = 1.0
+        self.spec_weight = w.reshape(1, 1, -1)
 
     def fwd(self, u: jnp.ndarray) -> jnp.ndarray:
+        if u.dtype not in (jnp.float32, jnp.float64):
+            u = u.astype(jnp.float32)  # rfft rejects bf16/f16 payloads
         return jnp.fft.rfftn(u, axes=(-3, -2, -1))
 
     def inv(self, spec: jnp.ndarray) -> jnp.ndarray:
@@ -163,19 +175,26 @@ class SpectralBatch:
         self._in_slots[id(u)] = (start, u)
         return start, lead
 
-    def _job(self, inputs, kfn, out_lead) -> SpectralRef:
-        """Enqueue one op: ``kfn(*specs) -> out_lead + kshape`` spectrum."""
+    def _job(self, inputs, kfn, out_lead, reduce: bool = False) -> SpectralRef:
+        """Enqueue one op: ``kfn(*specs) -> out_lead + kshape`` spectrum.
+
+        ``reduce=True`` marks a *spectrum-side reduction*: ``kfn`` returns
+        the job's final value directly (e.g. a Parseval norm) and the job
+        contributes nothing to the inverse ride — a batch of only reduction
+        jobs costs ONE forward and ZERO inverse transforms.
+        """
         slots = [self._input(u) for u in inputs]
-        self._jobs.append((slots, kfn, tuple(out_lead)))
+        self._jobs.append((slots, kfn, tuple(out_lead), reduce))
         return SpectralRef(self, len(self._jobs) - 1)
 
     def run(self) -> None:
         """Execute the coalesced ride pair (idempotent)."""
         if self._results is not None:
             return
-        self._results = []
         if not self._jobs:
+            self._results = []
             return
+        self._results = [None] * len(self._jobs)
         ins = (
             self._in_arrays[0]
             if len(self._in_arrays) == 1
@@ -183,24 +202,32 @@ class SpectralBatch:
         )
         specs = self.ops.fwd_real(ins)  # (B_in,) + kshape, one packed ride
         kshape = specs.shape[1:]
-        out_blocks, out_leads = [], []
-        for slots, kfn, out_lead in self._jobs:
+        out_blocks, inv_slots = [], []
+        for idx, (slots, kfn, out_lead, reduce) in enumerate(self._jobs):
             args = [
                 specs[start : start + max(int(np.prod(lead)), 1)].reshape(lead + kshape)
                 for start, lead in slots
             ]
             out = kfn(*args)
-            out_blocks.append(out.reshape((-1,) + kshape))
-            out_leads.append(out_lead)
-        allspec = (
-            out_blocks[0] if len(out_blocks) == 1 else jnp.concatenate(out_blocks, axis=0)
-        )
-        real = self.ops.inv_real(allspec)  # one packed ride
-        pos = 0
-        for out_lead in out_leads:
-            m = int(np.prod(out_lead)) if out_lead else 1
-            self._results.append(real[pos : pos + m].reshape(out_lead + real.shape[1:]))
-            pos += m
+            if reduce:  # already real-valued; skips the inverse ride
+                self._results[idx] = out
+            else:
+                out_blocks.append(out.reshape((-1,) + kshape))
+                inv_slots.append((idx, out_lead))
+        if out_blocks:
+            allspec = (
+                out_blocks[0]
+                if len(out_blocks) == 1
+                else jnp.concatenate(out_blocks, axis=0)
+            )
+            real = self.ops.inv_real(allspec)  # one packed ride
+            pos = 0
+            for idx, out_lead in inv_slots:
+                m = int(np.prod(out_lead)) if out_lead else 1
+                self._results[idx] = real[pos : pos + m].reshape(
+                    out_lead + real.shape[1:]
+                )
+                pos += m
         # drop input/job references: in eager use a retained handle must not
         # pin the stacked input buffers (the results are already extracted)
         self._in_arrays.clear()
@@ -268,13 +295,39 @@ class SpectralBatch:
         scale = self.ops._smooth_scale(sigma)
         return self._job([f], lambda s: scale * s, f.shape[:-3])
 
+    def reg_energy(self, v: jnp.ndarray, beta) -> SpectralRef:
+        """beta/2 ||Lap v||^2 as a spectrum-side Parseval reduction.
+
+        Shares the batch's one forward ride with every other job on ``v``
+        and joins NO inverse ride — the Armijo-trial lever: a line-search
+        objective evaluation reads the energy straight off the forward
+        spectrum instead of paying a dedicated forward/inverse pair
+        (ride-count pinned by ``tests/test_coalesce.py``).
+        """
+        return self._job(
+            [v],
+            lambda s: self.ops._reg_energy_spec(s, beta),
+            v.shape[:-4],
+            reduce=True,
+        )
+
 
 class SpectralOps:
-    """Paper's spectral operator toolbox over a pluggable FFT backend."""
+    """Paper's spectral operator toolbox over a pluggable FFT backend.
 
-    def __init__(self, grid: Grid, backend=None):
+    ``field_dtype`` (e.g. ``jnp.bfloat16``) selects the storage dtype of
+    every real-space field an operator RETURNS — the transport/FFT field
+    path of the mixed-precision knob (`repro.autotune`).  The transforms
+    and all k-space scalings stay complex64/f32 (inputs are upcast on the
+    forward side), so only the stored fields lose precision; critical
+    accumulations (inner products, time quadrature, the PCG recursion)
+    remain >= f32 by construction elsewhere.
+    """
+
+    def __init__(self, grid: Grid, backend=None, field_dtype=None):
         self.grid = grid
         self.fft = backend if backend is not None else LocalFFT(grid)
+        self.field_dtype = None if field_dtype is None else jnp.dtype(field_dtype)
 
     def batch(self) -> SpectralBatch:
         """Open a transform-coalescing batch (see ``SpectralBatch``)."""
@@ -288,8 +341,12 @@ class SpectralOps:
             lead = spec.shape[:-3]
             flat = spec.reshape((-1,) + spec.shape[-3:])
             out = self.fft.inv_packed(flat)
-            return out.reshape(lead + out.shape[-3:])
-        return self.fft.inv(spec)
+            out = out.reshape(lead + out.shape[-3:])
+        else:
+            out = self.fft.inv(spec)
+        if self.field_dtype is not None:
+            out = out.astype(self.field_dtype)
+        return out
 
     def fwd_real(self, u: jnp.ndarray) -> jnp.ndarray:
         """Forward transform of REAL fields; pairs of a batched stack ride
@@ -360,6 +417,25 @@ class SpectralOps:
         expo = -0.5 * ((k1 * sigma[0]) ** 2 + (k2 * sigma[1]) ** 2 + (k3 * sigma[2]) ** 2)
         return jnp.exp(expo)
 
+    def _reg_energy_spec(self, spec: jnp.ndarray, beta) -> jnp.ndarray:
+        """beta/2 ||Lap v||^2 read off the FORWARD spectrum of ``v`` (Parseval).
+
+        For the unnormalized DFT, ``h^3 sum_x |u|^2 = h^3/N sum_k |U(k)|^2``;
+        a half-spectrum backend (``LocalFFT``: rfft last axis) supplies
+        ``spec_weight`` to double the modes whose conjugate partners it
+        drops.  Equals the real-space quadrature of ``inv(-ksq * spec)`` to
+        roundoff — without the inverse transform (the spectrum-side lever
+        used by ``SpectralBatch.reg_energy``).  Reduces the component +
+        space axes, so a cohort ``(S, 3, k..)`` spectrum yields ``(S,)``.
+        """
+        mag = spec.real**2 + spec.imag**2  # f32 accumulation from complex64
+        w = getattr(self.fft, "spec_weight", None)
+        if w is not None:
+            mag = mag * w
+        e = jnp.sum(self.fft.ksq**2 * mag, axis=(-4, -3, -2, -1))
+        scale = self.grid.cell_volume / self.grid.num_points
+        return 0.5 * beta * scale * e
+
     # ------------------------------------------------------------------ #
     # first-order operators (Nyquist-zeroed wavenumbers, skew-adjoint)
     # ------------------------------------------------------------------ #
@@ -374,23 +450,23 @@ class SpectralOps:
     def div(self, v: jnp.ndarray) -> jnp.ndarray:
         """div v: (..., 3, N1,N2,N3) -> (..., N1,N2,N3) (leading dims batch)."""
         spec = self.fwd_real(v)  # batched over the component axis
-        return self.fft.inv(self._div_spec(spec))
+        return self.inv_real(self._div_spec(spec))
 
     # ------------------------------------------------------------------ #
     # even-order elliptic operators (full wavenumbers)
     # ------------------------------------------------------------------ #
     def laplacian(self, f: jnp.ndarray) -> jnp.ndarray:
-        return self.fft.inv(-self.fft.ksq * self.fwd_real(f))
+        return self.inv_real(-self.fft.ksq * self.fwd_real(f))
 
     def biharmonic(self, f: jnp.ndarray) -> jnp.ndarray:
-        return self.fft.inv(self.fft.ksq**2 * self.fwd_real(f))
+        return self.inv_real(self.fft.ksq**2 * self.fwd_real(f))
 
     def inv_laplacian(self, f: jnp.ndarray) -> jnp.ndarray:
         """Lap^{-1} with the zero mean mode mapped to zero."""
-        return self.fft.inv(self._inv_lap_scale() * self.fwd_real(f))
+        return self.inv_real(self._inv_lap_scale() * self.fwd_real(f))
 
     def inv_biharmonic(self, f: jnp.ndarray, zero_mode: float = 0.0) -> jnp.ndarray:
-        return self.fft.inv(self._inv_bihar_scale(zero_mode) * self.fwd_real(f))
+        return self.inv_real(self._inv_bihar_scale(zero_mode) * self.fwd_real(f))
 
     # ------------------------------------------------------------------ #
     # Leray projection: P = I - grad Lap^{-1} div  (paper eq. (4))
@@ -404,14 +480,14 @@ class SpectralOps:
         in the discrete spectral sense.  The k=0 (mean-velocity) mode is
         untouched: a constant field is divergence free.
         """
-        return self.fft.inv(self._leray_spec(self.fwd_real(v)))
+        return self.inv_real(self._leray_spec(self.fwd_real(v)))
 
     # ------------------------------------------------------------------ #
     # regularization operator A = beta Lap^2 and spectral preconditioner
     # ------------------------------------------------------------------ #
     def reg_apply(self, v: jnp.ndarray, beta) -> jnp.ndarray:
         """beta * Lap^2 v  (H^2 seminorm regularization, paper eq. (2a))."""
-        return self.fft.inv(self._reg_scale(beta) * self.fwd_real(v))
+        return self.inv_real(self._reg_scale(beta) * self.fwd_real(v))
 
     def precond_apply(self, r: jnp.ndarray, beta) -> jnp.ndarray:
         """(beta Lap^2)^{-1} r — the paper's spectral preconditioner.
@@ -419,7 +495,7 @@ class SpectralOps:
         Singular at k=0; the mean mode is passed through unchanged (there
         the Hessian is dominated by the data term, which is O(1)).
         """
-        return self.fft.inv(self._precond_scale(beta) * self.fwd_real(r))
+        return self.inv_real(self._precond_scale(beta) * self.fwd_real(r))
 
     # ------------------------------------------------------------------ #
     # fused elliptic ops (beyond-paper; EXPERIMENTS §Perf)
@@ -453,20 +529,20 @@ class SpectralOps:
     # ------------------------------------------------------------------ #
     def smooth(self, f: jnp.ndarray, sigma=None) -> jnp.ndarray:
         """Gaussian spectral filter; default bandwidth = one grid cell."""
-        return self.fft.inv(self._smooth_scale(sigma) * self.fwd_real(f))
+        return self.inv_real(self._smooth_scale(sigma) * self.fwd_real(f))
 
     # ------------------------------------------------------------------ #
     # diagnostics
     # ------------------------------------------------------------------ #
     def reg_energy(self, v: jnp.ndarray, beta) -> jnp.ndarray:
-        """beta/2 ||Lap v||^2 via real-space quadrature (mesh independent).
+        """beta/2 ||Lap v||^2 via Parseval on the forward spectrum (mesh
+        independent; equals the real-space quadrature of ``Lap v`` to
+        roundoff, pinned by ``tests/test_spectral.py``) — one forward
+        transform, NO inverse.
 
         A cohort velocity ``(S, 3, N..)`` returns per-subject energies
         ``(S,)`` (one batched transform for the whole cohort)."""
-        lap_v = self.fft.inv(-self.fft.ksq * self.fwd_real(v))
-        if v.ndim > 4:
-            return 0.5 * beta * self.grid.norm_sq_per(lap_v)
-        return 0.5 * beta * self.grid.norm_sq(lap_v)
+        return self._reg_energy_spec(self.fwd_real(v), beta)
 
     def jacobian_det(self, disp: jnp.ndarray) -> jnp.ndarray:
         """det(grad y) for y = x + u given displacement u (3,N1,N2,N3).

@@ -44,6 +44,8 @@ class DistContext:
         interp_method: str = "auto",
         halo_check: str = "error",
         plan_dtype=None,
+        field_dtype=None,
+        autotune: str = "cache",
     ):
         self.grid = grid
         self.mesh = mesh
@@ -56,15 +58,34 @@ class DistContext:
         self.interp_method = interp_method
         self.halo_check = halo_check
         self.plan_dtype = plan_dtype
-        self.fft = PencilFFT(grid, mesh, axes=self.axes, packed=packed, chunk=chunk)
-        self.ops = SpectralOps(grid, backend=self.fft)
+        # storage dtype of the transform/transport field path (e.g.
+        # jnp.bfloat16 halves a2a payloads and SL-stack HBM; critical
+        # accumulations stay >= f32 — see GNConfig.field_dtype)
+        self.field_dtype = field_dtype
+        self.autotune = autotune
+        if autotune != "off":
+            # fill knobs still at their default sentinels (chunk None,
+            # interp_method "auto", plan/field dtype None) from the tuning
+            # cache; explicit constructor arguments always win
+            from repro import autotune as _at
+
+            tuned = _at.consult_ctx(self)
+            self.chunk = tuned.get("chunk", self.chunk)
+            self.interp_method = tuned.get("interp_method", self.interp_method)
+            self.plan_dtype = tuned.get("plan_dtype", self.plan_dtype)
+            self.field_dtype = tuned.get("field_dtype", self.field_dtype)
+        self.fft = PencilFFT(
+            grid, mesh, axes=self.axes, packed=packed, chunk=self.chunk,
+            field_dtype=self.field_dtype,
+        )
+        self.ops = SpectralOps(grid, backend=self.fft, field_dtype=self.field_dtype)
         # per-shard kernel dispatch (Pallas on TPU / gather oracle) wrapped by
         # the planner's dynamic halo-budget check ("off" disables the check);
         # plan_dtype packs the cached InterpPlan weights (e.g. jnp.bfloat16
         # halves the plan's HBM footprint; the contraction stays f32)
         self.halo_interp = make_halo_interp(
-            grid, mesh, axes=self.axes, halo=self.halo, method=interp_method,
-            plan_dtype=plan_dtype,
+            grid, mesh, axes=self.axes, halo=self.halo, method=self.interp_method,
+            plan_dtype=self.plan_dtype,
         )
         self.interp = (
             self.halo_interp
@@ -98,6 +119,11 @@ class DistContext:
                 interp_method=self.interp_method,
                 halo_check=self.halo_check,
                 plan_dtype=self.plan_dtype,
+                field_dtype=self.field_dtype,
+                # the fine context already resolved its knobs; coarse grids
+                # inherit them verbatim rather than re-consulting the cache
+                # with a coarse-cell key (tuning targets the fine grid)
+                autotune="off",
             )
         return self._coarse_cache[shape]
 

@@ -146,16 +146,25 @@ class PencilFFT:
 
     ``chunk``: fields per pipelined chunk inside the shard_map body
     (``None`` = single ride, ``"auto"`` = footprint heuristic, int = fixed).
+
+    ``field_dtype``: storage dtype of the REAL fields the inverse side
+    returns (default ``grid.dtype``); e.g. ``jnp.bfloat16`` halves the
+    resident footprint of inverse-transformed stacks.  The transform
+    itself stays complex64 — forward inputs are upcast, so precision is
+    lost only at the real-space store (the ``repro.autotune``
+    mixed-precision knob, threaded here by ``DistContext``).
     """
 
     def __init__(
-        self, grid: Grid, mesh, axes=("data", "model"), packed: bool = True, chunk=None
+        self, grid: Grid, mesh, axes=("data", "model"), packed: bool = True, chunk=None,
+        field_dtype=None,
     ):
         validate_mesh_for_grid(mesh, grid.shape, axes)
         self.grid = grid
         self.mesh = mesh
         self.axes = tuple(axes)
         self.packed = packed
+        self.real_dtype = grid.dtype if field_dtype is None else jnp.dtype(field_dtype)
         a1, a2 = self.axes
         p1, p2 = mesh_axes_size(mesh, a1), mesh_axes_size(mesh, a2)
         self.pencil = (p1, p2)
@@ -188,13 +197,20 @@ class PencilFFT:
         out = fn(u.reshape((-1,) + u.shape[-3:]))
         return out.reshape(lead + out.shape[-3:])
 
+    @staticmethod
+    def _wide(u: jnp.ndarray) -> jnp.ndarray:
+        """Upcast sub-f32 real fields before the complex transform."""
+        if u.dtype in (jnp.bfloat16, jnp.float16):
+            return u.astype(jnp.float32)
+        return u
+
     def fwd(self, u: jnp.ndarray) -> jnp.ndarray:
         with telemetry.annotate("pencil_fft.fwd"):
-            return self._batched(self._fwd4, u)
+            return self._batched(self._fwd4, self._wide(u))
 
     def inv(self, spec: jnp.ndarray) -> jnp.ndarray:
         with telemetry.annotate("pencil_fft.inv"):
-            return self._batched(self._inv4, spec).real.astype(self.grid.dtype)
+            return self._batched(self._inv4, spec).real.astype(self.real_dtype)
 
     def constrain_k(self, spec: jnp.ndarray) -> jnp.ndarray:
         """Pin a k-space array to this backend's pencil sharding.
@@ -232,6 +248,7 @@ class PencilFFT:
         spectra — halving the forward-side transpose traffic (the mirror of
         ``inv_packed``).
         """
+        u = self._wide(u)
         b = u.shape[0]
         h = b // 2
         if h == 0:
@@ -270,4 +287,4 @@ class PencilFFT:
             )
             if b % 2:
                 out = jnp.concatenate([out, z[h:].real], axis=0)
-            return out.astype(self.grid.dtype)
+            return out.astype(self.real_dtype)

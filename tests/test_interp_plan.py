@@ -248,3 +248,21 @@ def test_bench_interp_record():
         mesh["collective_permutes"]["looped_c3"]
         == 3 * mesh["collective_permutes"]["c1"]
     )
+
+
+def test_bench_interp_record_bf16_and_pallas_columns():
+    """ISSUE 8 satellite: the committed record carries measured bf16-plan
+    and batched-Pallas columns next to the f32 planned path."""
+    path = os.path.join(ROOT, "BENCH_interp.json")
+    assert os.path.exists(path), "run: PYTHONPATH=src python -m benchmarks.run --suite interp"
+    rec = json.load(open(path))
+    for r in rec["single_device"]:
+        # bf16-packed plans are measured on every row and stay within the
+        # storage dtype's noise floor (~1e-2 relative)
+        assert r["planned_bf16_s"] > 0.0, r
+        assert r["planned_bf16_rel_err"] < 3e-2, r
+    pallas_rows = [r for r in rec["single_device"] if "pallas_batched_s" in r]
+    assert pallas_rows, "no Pallas rows in the committed record"
+    for r in pallas_rows:
+        assert r["pallas_mode"] in ("tpu", "interpret"), r
+        assert r["pallas_rel_err"] < 1e-3, r

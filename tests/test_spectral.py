@@ -182,3 +182,43 @@ def test_batch_handle_laziness_and_reuse_guard(ops32, rng):
         pass  # empty batch is a no-op
     with pytest.raises(ValueError):
         ops.batch().laplacian(f[0])  # not a grid-shaped field
+
+
+def test_reg_energy_parseval_matches_composition(ops32, rng):
+    """The Parseval lever: spectrum-side reg energy equals the real-space
+    composition 0.5 <v, A v> without ever leaving k-space."""
+    g, ops = ops32
+    v = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    beta = 1e-2
+    want = 0.5 * g.inner(v, ops.reg_apply(v, beta))
+    got = ops.reg_energy(v, beta)
+    assert abs(float(got - want)) <= 1e-5 * max(abs(float(want)), 1.0), (got, want)
+    # cohort stack reduces per-subject
+    vs = jnp.stack([v, 2.0 * v])
+    per = ops.reg_energy(vs, beta)
+    assert per.shape == (2,)
+    np.testing.assert_allclose(np.asarray(per)[1], 4.0 * float(want), rtol=1e-5)
+
+
+def test_batch_reg_energy_reduction_skips_inverse_ride(ops32, rng):
+    """A reduction job returns its value from the forward spectrum: a batch
+    of only reductions performs ZERO inverse transforms, and a mixed batch
+    adds none for the reduction member."""
+    g, _ = ops32
+    ops = SpectralOps(g)
+    v = jnp.asarray(rng.standard_normal((3,) + g.shape), jnp.float32)
+    calls = {"fwd": 0, "inv": 0}
+    fwd0, inv0 = ops.fwd_real, ops.inv_real
+    ops.fwd_real = lambda u: (calls.__setitem__("fwd", calls["fwd"] + 1), fwd0(u))[1]
+    ops.inv_real = lambda s: (calls.__setitem__("inv", calls["inv"] + 1), inv0(s))[1]
+    with ops.batch() as sb:
+        h = sb.reg_energy(v, 1e-2)
+    assert calls == {"fwd": 1, "inv": 0}, calls
+    want = 0.5 * g.inner(v, SpectralOps(g).reg_apply(v, 1e-2))
+    assert abs(float(h.get() - want)) <= 1e-5 * max(abs(float(want)), 1.0)
+    # mixed batch: the div output still rides one inverse, reg_energy adds none
+    with ops.batch() as sb:
+        hr = sb.reg_energy(v, 1e-2)
+        hd = sb.div(v)
+    assert calls == {"fwd": 2, "inv": 1}, calls
+    np.testing.assert_allclose(hd.get(), SpectralOps(g).div(v), atol=1e-4)
