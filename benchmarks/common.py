@@ -33,6 +33,17 @@ def emit(name: str, us_per_call: float, derived: str = ""):
         name=name, us_per_call=float(us_per_call), derived=derived))
 
 
+def _json_default(o):
+    """numpy/jax scalars (np.bool_, np.int64, np.float32, 0-d arrays) leak
+    into suite dicts easily; coerce anything with ``.item()`` rather than
+    losing a long measurement run to a TypeError at write time."""
+    item = getattr(o, "item", None)
+    if callable(item):
+        return item()
+    raise TypeError(f"Object of type {o.__class__.__name__} "
+                    "is not JSON serializable")
+
+
 def write_record(rec: dict, out: str) -> None:
     """Merge ``rec``'s top-level keys into the JSON record at ``out``.
 
@@ -51,5 +62,5 @@ def write_record(rec: dict, out: str) -> None:
     merged.update(rec)
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out + ".tmp", "w") as f:
-        json.dump(merged, f, indent=1)
+        json.dump(merged, f, indent=1, default=_json_default)
     os.replace(out + ".tmp", out)

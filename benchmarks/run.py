@@ -17,6 +17,7 @@ from repro import telemetry
 
 from benchmarks import (
     autotune_suite,
+    blocks_suite,
     cohort_suite,
     fft_suite,
     interp_suite,
@@ -39,6 +40,7 @@ TABLES = {
     "multilevel": multilevel_c2f.main,
     "cohort": cohort_suite.main,
     "autotune": autotune_suite.main,
+    "blocks": blocks_suite.main,
 }
 
 

@@ -16,6 +16,9 @@
 # The slow tier adds the subprocess multi-device mesh suites (pencil-FFT
 # layouts, halo exchange, mesh-vs-local `register` parity, the S=4
 # cohort collective-count pin).
+#
+# After the gates, the fast tier re-runs under the line-coverage floor
+# (COV_MIN, scripts/pycov.py; COV_SKIP=1 to skip).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,6 +34,17 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # allowlist — a corrupt or stale cache is a silent perf bug, not a crash
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.autotune --validate
+
+# coverage gate: the fast tier re-runs under a line-coverage floor
+# (scripts/pycov.py delegates to pytest-cov when installed, else a stdlib
+# settrace tracer over src/repro).  COV_MIN is the ratchet — set just
+# below the currently measured fast-tier coverage; raise it as tests
+# land, never lower it silently.  COV_SKIP=1 skips the re-run (local
+# quick loops); see benchmarks/README.md "Coverage gate".
+if [[ -z "${COV_SKIP:-}" ]]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/pycov.py --fail-under "${COV_MIN:-69}" -q -m "not slow"
+fi
 
 if [[ -n "${CI_SLOW:-}" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -35,6 +35,12 @@ BENCH_ML_TOY=1 python -m benchmarks.run --suite multilevel
 # writes results/BENCH_cohort_toy.json (gitignored)
 BENCH_COHORT_TOY=1 python -m benchmarks.run --suite cohort
 
+# toy-size blocks suite: a real tiled 32^3 blockwise solve vs monolithic
+# (residual within 10%, ONE compiled executable for all 8 blocks) plus the
+# 4096^3 partition dry-run accounting — writes results/BENCH_blocks_toy.json
+# (gitignored) and asserts both invariants on every run
+BENCH_BLOCKS_TOY=1 python -m benchmarks.run --suite blocks
+
 # toy-size autotune sweep: two 2-cell coordinate-descent sweeps on an
 # 8-host-device 2x4 mesh, then a second pass that must resolve every cell
 # from the tuning cache without re-sweeping — writes

@@ -1,0 +1,20 @@
+"""Out-of-core blockwise registration: map-reduce over overlapping blocks.
+
+``partition`` tiles the global grid into overlapping blocks, ``driver``
+registers every block through a cohort server after a coarse global warm
+start, ``reduce`` blends the per-block fields with partition-of-unity
+windows.  Entry point: ``blocks.solve`` (or ``RegistrationConfig(blocks=)``).
+"""
+from repro.blocks.driver import BlocksConfig, solve
+from repro.blocks.partition import Block, BlockPartition
+from repro.blocks.reduce import blend, seam_report, spectral_smooth
+
+__all__ = [
+    "Block",
+    "BlockPartition",
+    "BlocksConfig",
+    "blend",
+    "seam_report",
+    "solve",
+    "spectral_smooth",
+]

@@ -1,0 +1,285 @@
+"""Out-of-core blockwise registration: coarse warm start -> cohort-served
+blocks -> partition-of-unity reduce.
+
+``blocks.solve`` is the map-reduce driver over a ``BlockPartition``:
+
+1. **Coarse global solve (the warm start).**  The pair is restricted to an
+   in-memory ``coarse_shape`` (CLAIRE-style pre-smoothed restriction) and
+   registered there — through the multilevel ladder when ``coarse=``
+   carries a ``MultilevelConfig`` — then the coarse velocity is prolonged
+   to the fine grid.  Every block starts from the globally-consistent bulk
+   motion; the block solves only polish local residual deformation, which
+   is what keeps per-block motion smaller than the overlap.
+2. **Blocks as traffic.**  Extended blocks are extracted host-side
+   (the out-of-core read path), their warm starts rescaled into block
+   units (``Block.velocity_scale``), and every block becomes a ``RegJob``
+   streamed through a ``launch.reg_serve.CohortServer`` — all same-shaped
+   blocks share ONE compiled masked-cohort executable, retire
+   independently, and are billed per block via ``JobEvent`` (the tile
+   index rides the record's ``block`` field).  Each job carries its
+   cold-start gradient norm as ``g0_ref`` so warm-started blocks terminate
+   at the same absolute tolerance a cold solve would (the multilevel
+   ladder's convergence semantics, per tile).
+3. **Reduce.**  Per-block velocities are rescaled back to global units and
+   blended with the partition-of-unity windows (``reduce.blend``), with a
+   seam-consistency report over the overlaps and an optional global
+   spectral smooth.
+
+The returned velocity lives on the full fine grid; ``register()`` routes
+here via ``RegistrationConfig(blocks=...)`` and runs its usual deformation
+/diagnostics pass on the stitched field.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import telemetry
+from repro.blocks import reduce as blk_reduce
+from repro.blocks.partition import BlockPartition
+from repro.core import gauss_newton as gn
+from repro.core import objective as obj
+from repro.core.grid import Grid, make_grid
+from repro.core.spectral import SpectralOps
+from repro.launch.reg_serve import CohortServer, RegJob
+from repro.multilevel import transfer
+from repro.multilevel.hierarchy import MultilevelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BlocksConfig:
+    """Blockwise registration settings (wraps the per-block ``GNConfig``)."""
+
+    solver: gn.GNConfig = dataclasses.field(default_factory=gn.GNConfig)
+    block_shape: int | tuple = 32  # target core width per axis
+    overlap: int | tuple = 8  # one-sided halo (clamped: see BlockPartition)
+    # global warm-start resolution; None = half the fine grid (min 8/axis).
+    coarse_shape: int | tuple | None = None
+    # ladder for the coarse global solve; None = single-level cfg.solver.
+    coarse: MultilevelConfig | None = None
+    slots: int = 4  # cohort width per server bucket
+    presmooth: bool = True  # spectral Gaussian on the GLOBAL pair first
+    smooth_reduce: bool = False  # global spectral smooth after blending
+    seam_check: bool = True  # emit the overlap-consistency report
+
+    def __post_init__(self):
+        if self.solver.beta_continuation:
+            raise ValueError(
+                "BlocksConfig.solver must not use beta_continuation (blocks "
+                "are cohort-served; put the continuation schedule on the "
+                "coarse warm-start solve via coarse=MultilevelConfig(...))"
+            )
+
+
+def _resolve_coarse_shape(cfg: BlocksConfig, grid: Grid) -> tuple[int, int, int]:
+    if cfg.coarse_shape is not None:
+        cs = cfg.coarse_shape
+        cs = (cs, cs, cs) if isinstance(cs, int) else tuple(cs)
+        return tuple(int(c) for c in cs)
+    return tuple(min(n, max(8, n // 2)) for n in grid.shape)
+
+
+def _make_cold_g0(block_grid: Grid, cfg: gn.GNConfig):
+    """One jitted cold-start gradient norm, shared by every block of a
+    bucket (|g(v=0)| is the per-tile convergence reference — the
+    ``_cold_gradient_norm`` of the multilevel driver, at block shape)."""
+    bops = SpectralOps(block_grid)
+
+    def cold(rho_R, rho_T):
+        prob = obj.Problem(
+            grid=block_grid, rho_R=rho_R, rho_T=rho_T, beta=cfg.beta,
+            n_t=cfg.n_t, incompressible=cfg.incompressible,
+        )
+        state = obj.newton_state(
+            jnp.zeros((3,) + block_grid.shape, block_grid.dtype), prob, bops
+        )
+        return jnp.sqrt(block_grid.norm_sq(state.g))
+
+    return cold
+
+
+def solve(
+    rho_R: jnp.ndarray,
+    rho_T: jnp.ndarray,
+    grid: Grid | None = None,
+    cfg: BlocksConfig | None = None,
+    *,
+    ops: SpectralOps | None = None,
+    verbose: bool = False,
+):
+    """Blockwise registration of one pair; returns a ``gn.solve``-shaped
+    dict plus ``partition`` / ``per_block`` / ``seam`` / ``coarse`` stats."""
+    cfg = cfg or BlocksConfig()
+    grid = grid or make_grid(rho_R.shape)
+    ops = ops or SpectralOps(grid)
+    t_start = time.time()
+
+    if cfg.presmooth:
+        rho_R, rho_T = ops.smooth(rho_R), ops.smooth(rho_T)
+
+    # ---- 1. coarse in-memory global solve -> prolonged warm start ---------
+    coarse_shape = _resolve_coarse_shape(cfg, grid)
+    with telemetry.span("blocks.coarse", shape=list(coarse_shape)):
+        if coarse_shape == grid.shape:
+            cgrid, cops = grid, ops
+            rho_R_c, rho_T_c = rho_R, rho_T
+        else:
+            cgrid = make_grid(coarse_shape, grid.dtype)
+            cops = SpectralOps(cgrid)
+            rho_R_c = transfer.smooth_restrict(rho_R, ops, cops)
+            rho_T_c = transfer.smooth_restrict(rho_T, ops, cops)
+        if cfg.coarse is not None:
+            from repro import multilevel
+
+            cout = multilevel.solve(
+                rho_R_c, rho_T_c, cgrid, cfg.coarse, ops=cops, verbose=verbose
+            )
+        else:
+            cout = gn.solve(rho_R_c, rho_T_c, cgrid, cfg.solver, ops=cops,
+                            verbose=verbose)
+        v_global = (
+            cout["v"] if cgrid is grid else transfer.prolong(cout["v"], cops, ops)
+        )
+    coarse_weight = cgrid.num_points / grid.num_points
+    coarse_fe = (
+        float(cout.get("total_fine_equiv_matvecs", cout["hessian_matvecs"]))
+        * coarse_weight
+    )
+
+    # ---- 2. partition; serve every bucket of same-shaped blocks ------------
+    part = BlockPartition(grid.shape, cfg.block_shape, cfg.overlap)
+    rho_R_h, rho_T_h = np.asarray(rho_R), np.asarray(rho_T)
+    v_h = np.asarray(v_global)
+
+    buckets: dict[tuple, list] = {}
+    for b in part.blocks:
+        buckets.setdefault(b.ext_shape, []).append(b)
+
+    results_by_index: dict[tuple, tuple] = {}  # index -> (JobResult, scale)
+    bucket_stats: dict[str, dict] = {}
+    cohort_iterations = 0
+    compiled_executables = 0
+    for ext_shape, blist in buckets.items():
+        bgrid = make_grid(ext_shape, grid.dtype)
+        bweight = bgrid.num_points / grid.num_points
+        server = CohortServer(
+            bgrid, cfg.solver, slots=max(1, min(cfg.slots, len(blist)))
+        )
+        cold_g0 = jax.jit(_make_cold_g0(bgrid, cfg.solver))
+        jobs, scales = [], {}
+        with telemetry.span("blocks.extract", bucket=list(ext_shape)):
+            for b in blist:
+                rR_b = jnp.asarray(part.extract(rho_R_h, b))
+                rT_b = jnp.asarray(part.extract(rho_T_h, b))
+                scale = b.velocity_scale()
+                v0_b = jnp.asarray(
+                    part.extract(v_h, b) * scale, dtype=grid.dtype
+                )
+                scales[b.index] = scale
+                jobs.append(
+                    RegJob(
+                        job_id=f"block{b.index}",
+                        rho_R=rR_b,
+                        rho_T=rT_b,
+                        v0=v0_b,
+                        g0_ref=float(cold_g0(rR_b, rT_b)),
+                        block=b.index,
+                    )
+                )
+        server.admit(*jobs)
+        with telemetry.span("blocks.serve", bucket=list(ext_shape),
+                            n_blocks=len(blist)):
+            bucket_results = server.run(verbose=verbose)
+        by_id = {r.job_id: r for r in bucket_results}
+        for b in blist:
+            results_by_index[b.index] = (by_id[f"block{b.index}"], scales[b.index])
+        cohort_iterations += server.iterations
+        compiled_executables += server.compiled_executables()
+        bucket_stats["x".join(map(str, ext_shape))] = {
+            "blocks": len(blist),
+            "slots": server.slots,
+            "cohort_iterations": server.iterations,
+            "compiled_executables": server.compiled_executables(),
+            "fine_equiv_weight": bweight,
+        }
+
+    per_block = []
+    fields = []
+    block_matvecs = 0
+    block_newton = 0
+    block_fe = 0.0
+    for b in part.blocks:
+        res, scale = results_by_index[b.index]
+        fields.append(np.asarray(res.v) / scale)  # back to global units
+        bweight = float(np.prod(b.ext_shape)) / grid.num_points
+        fe = res.hessian_matvecs * bweight
+        block_matvecs += res.hessian_matvecs
+        block_newton += res.newton_iters
+        block_fe += fe
+        per_block.append(
+            {
+                "block": list(b.index),
+                "job_id": res.job_id,
+                "newton_iters": int(res.newton_iters),
+                "hessian_matvecs": int(res.hessian_matvecs),
+                "fine_equiv_matvecs": float(fe),
+                "rel_gnorm": float(res.rel_gnorm),
+                "converged": bool(res.converged),
+            }
+        )
+
+    # ---- 3. reduce: partition-of-unity blend (+ seam report, smooth) -------
+    with telemetry.span("blocks.reduce", n_blocks=len(part)):
+        v_np = blk_reduce.blend(fields, part, dtype=np.dtype(grid.dtype))
+        seam = blk_reduce.seam_report(fields, part) if cfg.seam_check else None
+        v = jnp.asarray(v_np)
+        if cfg.smooth_reduce:
+            v = ops.smooth(v)
+    if seam is not None:
+        telemetry.counter("blocks.seam_rel", seam["seam_rel"])
+
+    wall = time.time() - t_start
+    telemetry.emit(
+        telemetry.SolveEvent(
+            source="blocks.solve",
+            newton_iters=cout["newton_iters"] + block_newton,
+            hessian_matvecs=cout["hessian_matvecs"] + block_matvecs,
+            fine_equiv_matvecs=coarse_fe + block_fe,
+            compiled_executables=compiled_executables,
+            wall_s=wall,
+        )
+    )
+    return {
+        "v": v,
+        "history": cout["history"],
+        "newton_iters": cout["newton_iters"] + block_newton,
+        "hessian_matvecs": cout["hessian_matvecs"] + block_matvecs,
+        "fine_equiv_matvecs": coarse_fe + block_fe,
+        "coarse": {
+            "shape": list(coarse_shape),
+            "newton_iters": cout["newton_iters"],
+            "hessian_matvecs": cout["hessian_matvecs"],
+            "fine_equiv_matvecs": coarse_fe,
+        },
+        "partition": {
+            "grid": list(grid.shape),
+            "counts": list(part.counts),
+            "overlap": list(part.overlap),
+            "n_blocks": len(part),
+            "ext_shapes": [list(s) for s in part.ext_shapes],
+            "halo_overhead": part.halo_overhead,
+        },
+        "per_block": per_block,
+        "buckets": bucket_stats,
+        "block_matvecs": block_matvecs,
+        "cohort_iterations": cohort_iterations,
+        "compiled_executables": compiled_executables,
+        "all_converged": all(p["converged"] for p in per_block),
+        "seam": seam,
+        "wall_s": wall,
+        "grid": grid,
+    }

@@ -1,0 +1,229 @@
+"""Overlapping block decomposition of a periodic ``Grid`` (the map step).
+
+Terabyte-scale volumes exceed what one solve can hold (ROADMAP item 2;
+itk-dreg's map-reduce framing): subdivide the global grid into a Cartesian
+tiling of *core* regions that partition the volume exactly, grow each core
+by a one-sided ``overlap`` halo into an *extended* block, register every
+extended block independently, and blend the per-block fields back with
+partition-of-unity weight windows (``repro.blocks.reduce``).
+
+Geometry contract (all in global voxel coordinates, periodic wrap):
+
+* cores tile ``[0, N)`` per axis exactly — a plain paste of core interiors
+  reconstructs any volume bit-for-bit (property-pinned in
+  ``tests/test_property.py``);
+* the extended block is ``core ± overlap``; the overlap zone between two
+  axis-neighbours is ``2*overlap`` wide and is shared by EXACTLY those two
+  blocks (enforced by clamping ``overlap <= min_core // 2``), so the 1-D
+  ascending/descending ramp pair sums to one and the separable 3-D windows
+  are a partition of unity everywhere (pinned in ``tests/test_blocks.py``);
+* an axis tiled by a single block carries no overlap (a block must not
+  blend with its own wrap-around image).
+
+Weight windows are float64 on the host: blending runs out-of-band of the
+accelerator (the whole point is that the global volume never materializes
+on-device), and the f64 accumulation is what makes a constant field
+survive partition -> reduce bit-exactly after the cast back.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _as_shape3(x, name: str) -> tuple[int, int, int]:
+    if isinstance(x, (int, np.integer)):
+        x = (x, x, x)
+    out = tuple(int(v) for v in x)
+    if len(out) != 3:
+        raise ValueError(f"{name} must be an int or a 3-tuple, got {x!r}")
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    """One tile: core region + the applied one-sided halo, in global coords."""
+
+    index: tuple[int, int, int]  # position in the (B1, B2, B3) tiling
+    core_start: tuple[int, int, int]
+    core_shape: tuple[int, int, int]
+    halo: tuple[int, int, int]  # one-sided overlap actually applied per axis
+    grid_shape: tuple[int, int, int]
+
+    @property
+    def ext_start(self) -> tuple[int, int, int]:
+        return tuple(s - h for s, h in zip(self.core_start, self.halo))
+
+    @property
+    def ext_shape(self) -> tuple[int, int, int]:
+        return tuple(c + 2 * h for c, h in zip(self.core_shape, self.halo))
+
+    def ext_indices(self, axis: int) -> np.ndarray:
+        """Global voxel indices of the extended block along ``axis`` (wrapped)."""
+        n = self.grid_shape[axis]
+        start = self.core_start[axis] - self.halo[axis]
+        return (np.arange(self.ext_shape[axis]) + start) % n
+
+    def core_slice(self, axis: int) -> slice:
+        """Core region along ``axis`` — contiguous, never wraps."""
+        s = self.core_start[axis]
+        return slice(s, s + self.core_shape[axis])
+
+    def interior_slice(self, axis: int) -> slice:
+        """The core region in the extended block's LOCAL coordinates."""
+        h = self.halo[axis]
+        return slice(h, h + self.core_shape[axis])
+
+    def velocity_scale(self) -> np.ndarray:
+        """Per-component factor mapping a global velocity into block units.
+
+        Both grids span the same [0, 2pi) torus per axis, but the block's
+        ``ext_shape[a]`` samples cover only ``ext_shape[a]`` global cells:
+        one block coordinate unit is ``grid_shape[a] / ext_shape[a]`` global
+        units, so a physical velocity component transfers as
+        ``v_block[a] = v_global[a] * N_a / E_a`` (the same displacement in
+        voxels — exactly the rescaling ``multilevel.precond.restrict_state``
+        applies to SL departure fields).  Shape (3, 1, 1, 1) for broadcast.
+        """
+        f = [n / e for n, e in zip(self.grid_shape, self.ext_shape)]
+        return np.asarray(f, np.float32).reshape(3, 1, 1, 1)
+
+
+def _axis_cores(n: int, bs: int) -> list[int]:
+    """Near-equal core widths tiling ``n`` with blocks of target width ``bs``."""
+    b = max(1, -(-n // bs))  # ceil
+    base, extra = divmod(n, b)
+    return [base + (1 if i < extra else 0) for i in range(b)]
+
+
+def _ramp(width: int) -> np.ndarray:
+    """Ascending half-open linear ramp over an overlap zone of ``width``
+    samples; the neighbour's descending ramp is ``1 - _ramp`` at the same
+    global positions, so every zone sums to one by construction."""
+    return (np.arange(width, dtype=np.float64) + 0.5) / width
+
+
+class BlockPartition:
+    """The overlapping Cartesian tiling of a ``(N1, N2, N3)`` periodic grid.
+
+    ``block_shape`` is the target core width per axis (the last block of an
+    axis absorbs the remainder, cores stay within one voxel of each other);
+    ``overlap`` is the requested one-sided halo, clamped per axis to half
+    the smallest core (partition-of-unity requirement) and to zero on
+    single-block axes.
+    """
+
+    def __init__(self, grid_shape, block_shape, overlap):
+        self.grid_shape = _as_shape3(grid_shape, "grid_shape")
+        block_shape = _as_shape3(block_shape, "block_shape")
+        overlap = _as_shape3(overlap, "overlap")
+        if any(o < 0 for o in overlap):
+            raise ValueError(f"overlap must be non-negative, got {overlap}")
+
+        axis_cores = [
+            _axis_cores(n, bs) for n, bs in zip(self.grid_shape, block_shape)
+        ]
+        self.counts = tuple(len(c) for c in axis_cores)
+        self.overlap = tuple(
+            0 if len(cores) == 1 else min(o, min(cores) // 2)
+            for o, cores in zip(overlap, axis_cores)
+        )
+        starts = [np.concatenate([[0], np.cumsum(c)[:-1]]) for c in axis_cores]
+
+        self.blocks: list[Block] = []
+        for i1 in range(self.counts[0]):
+            for i2 in range(self.counts[1]):
+                for i3 in range(self.counts[2]):
+                    idx = (i1, i2, i3)
+                    self.blocks.append(
+                        Block(
+                            index=idx,
+                            core_start=tuple(
+                                int(starts[a][idx[a]]) for a in range(3)
+                            ),
+                            core_shape=tuple(
+                                int(axis_cores[a][idx[a]]) for a in range(3)
+                            ),
+                            halo=self.overlap,
+                            grid_shape=self.grid_shape,
+                        )
+                    )
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def ext_shapes(self) -> tuple[tuple[int, int, int], ...]:
+        """Distinct extended-block shapes (one entry == one server bucket ==
+        one compiled executable for the whole partition)."""
+        return tuple(sorted({b.ext_shape for b in self.blocks}))
+
+    @property
+    def halo_overhead(self) -> float:
+        """Redundant voxels the overlap re-registers: sum(E^3)/N^3 - 1."""
+        total = sum(int(np.prod(b.ext_shape)) for b in self.blocks)
+        return total / float(np.prod(self.grid_shape)) - 1.0
+
+    # ---- extraction / paste -------------------------------------------------
+    def extract(self, f, block: Block, halo: bool = True) -> np.ndarray:
+        """Periodic gather of ``block`` from ``f (..., N1, N2, N3)``.
+
+        ``halo=True`` returns the extended block, ``halo=False`` the bare
+        core.  Host-side numpy: this is the out-of-core read path (a real
+        deployment replaces the in-memory gather with a chunked file read).
+        """
+        f = np.asarray(f)
+        if halo:
+            i1, i2, i3 = (block.ext_indices(a) for a in range(3))
+            return f[..., i1[:, None, None], i2[None, :, None], i3[None, None, :]]
+        return f[..., block.core_slice(0), block.core_slice(1), block.core_slice(2)]
+
+    def weights(self, block: Block) -> np.ndarray:
+        """Separable partition-of-unity window over the extended block (f64).
+
+        Flat 1 on the deep interior, linear cross-fade over each 2*overlap
+        zone; the per-axis windows of all blocks sum to one at every global
+        voxel, so the 3-D products do too (separability).
+        """
+        axes = []
+        for a in range(3):
+            e, h = block.ext_shape[a], block.halo[a]
+            w = np.ones(e, np.float64)
+            if h > 0:
+                ramp = _ramp(2 * h)
+                w[: 2 * h] = ramp
+                w[e - 2 * h :] = 1.0 - ramp
+            axes.append(w)
+        return axes[0][:, None, None] * axes[1][None, :, None] * axes[2][None, None, :]
+
+    def weight_sum(self) -> np.ndarray:
+        """All windows pasted into the global frame — the partition-of-unity
+        diagnostic (== 1 everywhere up to f64 rounding)."""
+        out = np.zeros(self.grid_shape, np.float64)
+        for b in self.blocks:
+            i1, i2, i3 = (b.ext_indices(a) for a in range(3))
+            out[i1[:, None, None], i2[None, :, None], i3[None, None, :]] += self.weights(b)
+        return out
+
+    def paste_interiors(self, fields) -> np.ndarray:
+        """Unweighted paste of every block's core — exact reconstruction.
+
+        ``fields`` are per-block arrays in ``self.blocks`` order, either
+        extended (halo cropped here) or bare cores; leading axes pass
+        through.  Cores tile the volume disjointly, so this inverts
+        ``extract`` bit-for-bit — the partition round-trip property.
+        """
+        fields = [np.asarray(f) for f in fields]
+        lead = fields[0].shape[:-3]
+        out = np.zeros(lead + self.grid_shape, fields[0].dtype)
+        for b, f in zip(self.blocks, fields):
+            if f.shape[-3:] == b.ext_shape and b.ext_shape != b.core_shape:
+                f = f[..., b.interior_slice(0), b.interior_slice(1), b.interior_slice(2)]
+            elif f.shape[-3:] != b.core_shape:
+                raise ValueError(
+                    f"block {b.index}: field trailing shape {f.shape[-3:]} is "
+                    f"neither core {b.core_shape} nor extended {b.ext_shape}"
+                )
+            out[..., b.core_slice(0), b.core_slice(1), b.core_slice(2)] = f
+        return out

@@ -14,8 +14,9 @@ from typing import TYPE_CHECKING
 
 import jax.numpy as jnp
 
-if TYPE_CHECKING:  # runtime import stays inside register(): core must not
-    from repro.multilevel.hierarchy import MultilevelConfig  # depend on multilevel
+if TYPE_CHECKING:  # runtime imports stay inside register(): core must not
+    from repro.blocks.driver import BlocksConfig  # depend on blocks/multilevel
+    from repro.multilevel.hierarchy import MultilevelConfig
 
 from repro.core import gauss_newton as gn
 from repro.core import semilag
@@ -31,6 +32,10 @@ class RegistrationConfig:
     # coarse-to-fine grid continuation (repro.multilevel); None = single level.
     # ``multilevel.solver`` supersedes ``solver`` when set.
     multilevel: "MultilevelConfig | None" = None
+    # out-of-core blockwise map-reduce (repro.blocks); supersedes both of the
+    # above when set — ``blocks.solver`` drives the per-block solves and the
+    # final diagnostics.  Mutually exclusive with ``multilevel``.
+    blocks: "BlocksConfig | None" = None
 
 
 def register(
@@ -77,7 +82,31 @@ def register(
         rho_R = ops.smooth(rho_R)
         rho_T = ops.smooth(rho_T)
 
-    if config.multilevel is not None:
+    if config.blocks is not None:
+        if config.multilevel is not None:
+            raise ValueError("RegistrationConfig: blocks and multilevel are "
+                             "mutually exclusive")
+        if ctx is not None or interp is not None:
+            raise NotImplementedError(
+                "blockwise registration serves blocks on the local backend; "
+                "mesh-served blocks are a ROADMAP follow-up"
+            )
+        if v0 is not None:
+            raise NotImplementedError(
+                "blocks.solve builds its own warm start from the coarse "
+                "global solve; v0= is not supported with blocks="
+            )
+        from repro import blocks
+
+        # the global pair was already presmoothed above (when enabled) —
+        # blocks.solve must not smooth a second time
+        out = blocks.solve(
+            rho_R, rho_T, grid,
+            dataclasses.replace(config.blocks, presmooth=False),
+            ops=ops, verbose=verbose,
+        )
+        config = dataclasses.replace(config, solver=config.blocks.solver)
+    elif config.multilevel is not None:
         from repro import multilevel
 
         out = multilevel.solve(

@@ -49,11 +49,24 @@ _FORCING_SENTINEL = 1e-30  # first iteration of a subject: eta = eta_max
 
 @dataclasses.dataclass
 class RegJob:
-    """One registration request: a reference/template image pair."""
+    """One registration request: a reference/template image pair.
+
+    ``v0`` optionally warm-starts the slot (``repro.blocks`` admits every
+    tile with the prolonged global coarse velocity); ``g0_ref`` optionally
+    fixes the CONVERGENCE reference gradient norm — a warm-started job
+    passes its cold-start norm so it terminates at the same absolute
+    tolerance a cold solve would, exactly the ``gn.solve(g0_ref=...)``
+    semantics of the multilevel ladder (the Eisenstat-Walker forcing
+    reference stays decoupled: it is always the slot's first iterate).
+    ``block`` tags the job's tile index for per-block ``JobEvent`` billing.
+    """
 
     job_id: Any
     rho_R: jnp.ndarray  # (N1, N2, N3)
     rho_T: jnp.ndarray
+    v0: jnp.ndarray | None = None  # (3, N..) warm start; None = zero
+    g0_ref: float | None = None
+    block: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -94,6 +107,7 @@ class CohortServer:
         self._rho_T = jnp.zeros((S,) + grid.shape, grid.dtype)
         self._g_forcing = np.full(S, _FORCING_SENTINEL, np.float32)
         self._g0 = np.zeros(S, np.float32)  # termination reference per slot
+        self._g0_preset = np.zeros(S, bool)  # True: job supplied g0_ref
         self._newton = np.zeros(S, np.int64)
         self._cg = np.zeros(S, np.int64)
         self._rel = np.zeros(S, np.float32)
@@ -118,11 +132,14 @@ class CohortServer:
             if self._jobs[s] is None and self.queue:
                 job = self.queue.pop(0)
                 self._jobs[s] = job
-                self._v = self._v.at[s].set(0.0)
+                self._v = self._v.at[s].set(
+                    0.0 if job.v0 is None else jnp.asarray(job.v0, self.grid.dtype)
+                )
                 self._rho_R = self._rho_R.at[s].set(jnp.asarray(job.rho_R))
                 self._rho_T = self._rho_T.at[s].set(jnp.asarray(job.rho_T))
                 self._g_forcing[s] = _FORCING_SENTINEL
-                self._g0[s] = 0.0
+                self._g0_preset[s] = job.g0_ref is not None
+                self._g0[s] = job.g0_ref if job.g0_ref is not None else 0.0
                 self._newton[s] = 0
                 self._cg[s] = 0
                 if self.iterations > 0:
@@ -158,6 +175,7 @@ class CohortServer:
                 queue_wait_steps=int(self._queue_wait[s]),
                 admitted_step=int(self._admitted_at[s]),
                 retired_step=self.iterations,
+                block=list(job.block) if job.block is not None else None,
             ),
             echo=self._echo,
         )
@@ -186,12 +204,14 @@ class CohortServer:
         for s in range(self.slots):
             if not active[s]:
                 continue
-            # a freshly admitted subject's first iterate fixes BOTH its
-            # Eisenstat-Walker forcing reference and its termination
-            # reference (the decoupling of gn.solve, per slot)
+            # a freshly admitted subject's first iterate fixes its
+            # Eisenstat-Walker forcing reference, and — unless the job
+            # supplied an explicit g0_ref (warm-started blocks do) — its
+            # termination reference (the decoupling of gn.solve, per slot)
             if self._g_forcing[s] == _FORCING_SENTINEL:
                 self._g_forcing[s] = gnorm[s]
-                self._g0[s] = gnorm[s]
+                if not self._g0_preset[s]:
+                    self._g0[s] = gnorm[s]
             self._rel[s] = gnorm[s] / max(self._g0[s], _FORCING_SENTINEL)
             converged = self._rel[s] <= self.cfg.gtol
             if converged or step_len[s] == 0.0 or self._newton[s] >= self.cfg.max_newton:

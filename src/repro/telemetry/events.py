@@ -138,6 +138,9 @@ class JobEvent(Event):
     queue_wait_steps: int = 0  # cohort iterations spent queued before a slot
     admitted_step: int = 0  # server.iterations when the job entered its slot
     retired_step: int = 0
+    # tile index when the job is one block of a repro.blocks partition —
+    # per-block billing rides the same record (None for plain jobs)
+    block: list | None = None
 
 
 @dataclasses.dataclass

@@ -6,6 +6,15 @@ count at first jax init.
 Markers (fast tier: ``pytest -m "not slow"``, see ROADMAP):
     slow — subprocess-spawning / minutes-long cases
     dist — exercises the multi-device repro.dist path
+
+Randomness: every test draws through the shared seeded fixtures below
+(``rng`` for numpy streams, ``jax_key`` for jax PRNG keys), all derived
+from ONE session seed.  ``REPRO_TEST_SEED=<int>`` re-seeds the whole
+suite — the flake-hunting knob: a failure that appears under one seed
+and not another is a tolerance problem, not a logic problem.  ``rng`` is
+function-scoped so each test owns a deterministic stream regardless of
+which subset of the suite runs (a session-scoped stream made any
+``-k``-selected run draw different numbers than the full suite).
 """
 import os
 import subprocess
@@ -33,6 +42,7 @@ def run_multidevice(body: str, devices: int = 8, timeout: int = 520) -> str:
         import sys
         sys.path.insert(0, {os.path.join(ROOT, "src")!r})
         import jax, jax.numpy as jnp, numpy as np
+        TEST_SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
         """
     ) + textwrap.dedent(body)
     proc = subprocess.run(
@@ -42,9 +52,23 @@ def run_multidevice(body: str, devices: int = 8, timeout: int = 520) -> str:
     return proc.stdout
 
 
+TEST_SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+
 @pytest.fixture(scope="session")
-def rng():
-    return np.random.default_rng(0)
+def test_seed():
+    """The suite-wide base seed (override with REPRO_TEST_SEED=<int>)."""
+    return TEST_SEED
+
+
+@pytest.fixture
+def rng(test_seed):
+    return np.random.default_rng(test_seed)
+
+
+@pytest.fixture
+def jax_key(test_seed):
+    return jax.random.PRNGKey(test_seed)
 
 
 @pytest.fixture(scope="session")

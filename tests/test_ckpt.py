@@ -62,7 +62,7 @@ def test_elastic_restore_respec(tmp_path, rng, single_mesh):
 
 
 @pytest.mark.slow
-def test_bit_exact_resume(tmp_path, rng, single_mesh):
+def test_bit_exact_resume(tmp_path, rng, jax_key, single_mesh):
     """Train 4 steps; or train 2, checkpoint, restart, train 2: identical."""
     cfg = get_smoke_config("qwen3-1.7b")
     model = build_model(cfg)
@@ -71,7 +71,7 @@ def test_bit_exact_resume(tmp_path, rng, single_mesh):
     step = jax.jit(make_train_step(model, opt_cfg))
     stream = TokenStream(seed=3, batch=2, seq=16, vocab=cfg.vocab)
 
-    params, _ = model.init(jax.random.PRNGKey(0), rules)
+    params, _ = model.init(jax_key, rules)
     opt = adamw.init_state(params)
 
     # straight 4 steps

@@ -41,7 +41,7 @@ def test_experiments_citations_exist():
 
 def test_architecture_doc_names_the_layers():
     arch = _read(os.path.join("docs", "ARCHITECTURE.md"))
-    for module in ("core", "kernels", "dist", "multilevel", "launch"):
+    for module in ("core", "kernels", "dist", "multilevel", "launch", "blocks"):
         assert f"{module}/" in arch, (
             f"docs/ARCHITECTURE.md should map the {module} layer"
         )

@@ -43,10 +43,10 @@ def _block_cfg():
     )
 
 
-def test_mamba_block_decode_matches_full(rng, single_mesh):
+def test_mamba_block_decode_matches_full(rng, jax_key, single_mesh):
     cfg = _block_cfg()
     rules = ShardRules(single_mesh)
-    p, _ = mamba2.mamba_init(cfg, jax.random.PRNGKey(0), rules)
+    p, _ = mamba2.mamba_init(cfg, jax_key, rules)
     B, S = 2, 10
     x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.3, jnp.float32)
     full = mamba2.mamba_apply(cfg, p, x, chunk=5)

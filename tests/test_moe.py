@@ -20,10 +20,10 @@ def _cfg(**kw):
 
 
 @pytest.fixture(scope="module")
-def setup(single_mesh):
+def setup(single_mesh, test_seed):
     cfg = _cfg()
     rules = ShardRules(single_mesh)
-    p, _ = moe.moe_init(cfg, jax.random.PRNGKey(0), rules)
+    p, _ = moe.moe_init(cfg, jax.random.PRNGKey(test_seed), rules)
     return cfg, p
 
 
