@@ -60,7 +60,6 @@ def write_record(rec: dict, out: str) -> None:
         except (json.JSONDecodeError, OSError):
             merged = {}
     merged.update(rec)
-    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-    with open(out + ".tmp", "w") as f:
-        json.dump(merged, f, indent=1, default=_json_default)
-    os.replace(out + ".tmp", out)
+    from repro.resilience.atomic import atomic_write_json
+
+    atomic_write_json(out, merged, indent=1, default=_json_default)

@@ -1,0 +1,236 @@
+"""Resilience suite: recovery overhead vs healthy baseline + ckpt/resume cost.
+
+    PYTHONPATH=src python -m benchmarks.run --suite resilience
+
+Two cells, written to ``BENCH_resilience.json``:
+
+* ``chaos`` — the same job stream served twice: healthy, then with a NaN
+  injected into one job's iterate mid-flight under
+  ``RetryPolicy(max_attempts=2)``.  The record pins the three invariants
+  the subsystem exists for — every un-faulted job's velocity is
+  BIT-IDENTICAL to the healthy run (``unfaulted_bit_identical``), the
+  faulted job completes through the degraded retry
+  (``faulted_completed``), and the whole chaos session still compiles ONE
+  executable (the beta-only rung re-uses the primary bucket's program) —
+  plus the measured recovery overhead (``overhead_ratio``: faulted wall /
+  healthy wall, the cost of the retry attempt).
+* ``ckpt`` — the same stream with periodic checkpointing: an
+  uninterrupted reference run, a run killed mid-stream
+  (``KillAt`` -> ``SimulatedCrash``), and the resume from the latest
+  snapshot.  Pins that the resume re-serves ONLY the unfinished jobs and
+  reproduces the reference bit-identically with billing preserved, and
+  records the cost split: checkpointing overhead
+  (``checkpoint_overhead_ratio`` vs the un-checkpointed healthy wall) and
+  the resume's wall as a fraction of the full run
+  (``resume_wall_fraction`` — the work the snapshot saved).
+
+``BENCH_RESILIENCE_TOY=1`` (used by ``scripts/smoke.sh``) shrinks the
+problem and writes ``results/BENCH_resilience_toy.json`` instead of the
+committed record.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks import common
+from benchmarks.common import emit
+from repro import telemetry
+from repro.core import gauss_newton as gn
+from repro.data import synthetic
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_resilience.json")
+TOY_OUT = os.path.join(ROOT, "results", "BENCH_resilience_toy.json")
+
+
+def _jobs(n, amps, n_t):
+    from repro.launch.reg_serve import RegJob
+
+    jobs, grid = [], None
+    for j, a in enumerate(amps):
+        rho_R, rho_T, _, grid = synthetic.synthetic_problem(n, n_t=n_t, amplitude=a)
+        jobs.append(RegJob(job_id=f"job{j}", rho_R=rho_R, rho_T=rho_T))
+    return jobs, grid
+
+
+def measure_chaos(n: int = 24, amps=(0.3, 0.6, 0.9, 1.2), n_t: int = 4,
+                  beta: float = 1e-2, gtol: float = 1e-2, max_newton: int = 12,
+                  max_cg: int = 50, slots: int = 2, fault_job: str = "job1",
+                  fault_iteration: int = 1) -> dict:
+    """Healthy serve vs the same stream with one NaN-poisoned iterate."""
+    import numpy as np
+
+    from repro.launch.reg_serve import serve_jobs
+    from repro.resilience import health
+    from repro.resilience.faults import NaNInjector
+    from repro.resilience.policy import RetryPolicy
+
+    cfg = gn.GNConfig(beta=beta, n_t=n_t, max_newton=max_newton, gtol=gtol,
+                      max_cg=max_cg)
+
+    jobs, _ = _jobs(n, amps, n_t)
+    t0 = time.time()
+    healthy = serve_jobs(jobs, cfg, slots=slots)
+    t_healthy = time.time() - t0
+    ref = {r.job_id: r for r in healthy["results"]}
+
+    jobs, _ = _jobs(n, amps, n_t)
+    fault = NaNInjector(job_id=fault_job, field="v", at_iteration=fault_iteration)
+    t0 = time.time()
+    chaos = serve_jobs(jobs, cfg, slots=slots,
+                       retry=RetryPolicy(max_attempts=2), faults=[fault])
+    t_chaos = time.time() - t0
+    res = {r.job_id: r for r in chaos["results"]}
+
+    unfaulted = sorted(set(ref) - {fault_job})
+    bit_identical = all(
+        np.array_equal(res[j].v, ref[j].v)
+        and res[j].hessian_matvecs == ref[j].hessian_matvecs
+        for j in unfaulted
+    )
+    rec = {
+        "problem": {"grid": [n, n, n], "beta": beta, "gtol": gtol, "n_t": n_t,
+                    "amplitudes": list(amps), "jobs": len(amps),
+                    "slots": slots, "fault_job": fault_job,
+                    "fault_iteration": fault_iteration},
+        "healthy": {
+            "wall_s": t_healthy,
+            "cohort_iterations": _iterations(healthy),
+            "compiled_executables": healthy["compiled_executables"],
+        },
+        "faulted": {
+            "wall_s": t_chaos,
+            "cohort_iterations": _iterations(chaos),
+            "compiled_executables": chaos["compiled_executables"],
+            "per_job": [
+                {"job_id": r.job_id, "status": r.status,
+                 "attempts": int(r.attempts),
+                 "newton_iters": r.newton_iters,
+                 "fine_equiv_matvecs": r.fine_equiv_matvecs}
+                for r in sorted(chaos["results"], key=lambda r: r.job_id)
+            ],
+        },
+        "overhead_ratio": t_chaos / max(t_healthy, 1e-30),
+        "unfaulted_bit_identical": bit_identical,
+        "faulted_completed": (
+            res[fault_job].attempts == 2
+            and res[fault_job].status not in health.FAILED_NAMES
+            and bool(np.isfinite(res[fault_job].v).all())
+        ),
+    }
+    # the invariants the suite exists to record
+    assert fault.fired
+    assert rec["unfaulted_bit_identical"], "fault leaked into healthy lanes"
+    assert rec["faulted_completed"], res[fault_job].status
+    assert chaos["compiled_executables"] == 1, chaos["compiled_executables"]
+    return rec
+
+
+def _iterations(out: dict) -> int:
+    return sum(st["cohort_iterations"] for st in out["buckets"].values())
+
+
+def measure_ckpt(n: int = 24, amps=(0.3, 0.6, 0.9, 1.2), n_t: int = 4,
+                 beta: float = 1e-2, gtol: float = 1e-2, max_newton: int = 12,
+                 max_cg: int = 50, slots: int = 2, checkpoint_every: int = 2,
+                 kill_at: int = 4) -> dict:
+    """Checkpointed run, kill mid-stream, resume from the latest snapshot."""
+    import numpy as np
+
+    from repro.launch.reg_serve import serve_jobs
+    from repro.resilience.faults import KillAt, SimulatedCrash
+
+    cfg = gn.GNConfig(beta=beta, n_t=n_t, max_newton=max_newton, gtol=gtol,
+                      max_cg=max_cg)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        jobs, _ = _jobs(n, amps, n_t)
+        t0 = time.time()
+        plain = serve_jobs(jobs, cfg, slots=slots)
+        t_plain = time.time() - t0
+
+        jobs, _ = _jobs(n, amps, n_t)
+        t0 = time.time()
+        ref_out = serve_jobs(jobs, cfg, slots=slots,
+                             checkpoint=os.path.join(tmp, "ref"),
+                             checkpoint_every=checkpoint_every)
+        t_ref = time.time() - t0
+        ref = {r.job_id: r for r in ref_out["results"]}
+
+        ck = os.path.join(tmp, "ck")
+        jobs, _ = _jobs(n, amps, n_t)
+        kill = KillAt(at_iteration=kill_at)
+        t0 = time.time()
+        try:
+            serve_jobs(jobs, cfg, slots=slots, checkpoint=ck,
+                       checkpoint_every=checkpoint_every, faults=[kill])
+            raise RuntimeError("KillAt never fired")
+        except SimulatedCrash:
+            pass
+        t_killed = time.time() - t0
+
+        with telemetry.ListSink() as sink:
+            t0 = time.time()
+            out2 = serve_jobs([], cfg, slots=slots, checkpoint=ck,
+                              checkpoint_every=checkpoint_every, resume=True)
+            t_resume = time.time() - t0
+        res = {r.job_id: r for r in out2["results"]}
+        recov = next(r for r in sink.records
+                     if r["kind"] == "recovery"
+                     and r["action"] == "resume_from_checkpoint")
+
+    preserved = set(res) == set(ref) and all(
+        np.array_equal(res[j].v, ref[j].v)
+        and res[j].hessian_matvecs == ref[j].hessian_matvecs
+        and res[j].status == ref[j].status
+        for j in ref
+    )
+    rec = {
+        "problem": {"grid": [n, n, n], "jobs": len(amps), "slots": slots,
+                    "checkpoint_every": checkpoint_every, "kill_at": kill_at},
+        "wall_s_plain": t_plain,
+        "wall_s_checkpointed": t_ref,
+        "checkpoint_overhead_ratio": t_ref / max(t_plain, 1e-30),
+        "wall_s_killed": t_killed,
+        "wall_s_resume": t_resume,
+        "resume_wall_fraction": t_resume / max(t_ref, 1e-30),
+        "resumed_from_step": recov["step"],
+        "completed_in_snapshot": recov["attrs"]["completed"],
+        "reserved_unfinished": recov["attrs"]["unfinished"],
+        "resume_bit_identical": preserved,
+    }
+    assert kill.fired
+    assert rec["resume_bit_identical"], "resume drifted from the reference run"
+    assert recov["attrs"]["completed"] + recov["attrs"]["unfinished"] == len(amps)
+    return rec
+
+
+def write_record(rec: dict, out: str = DEFAULT_OUT) -> None:
+    common.write_record(rec, out)
+
+
+def main(out: str | None = None):
+    toy = bool(os.environ.get("BENCH_RESILIENCE_TOY"))
+    out = out or (TOY_OUT if toy else DEFAULT_OUT)
+    if toy:
+        kw = dict(n=12, amps=(0.4, 0.8, 1.2), n_t=2, max_newton=6, max_cg=15)
+        rec = {"chaos": measure_chaos(**kw),
+               "ckpt": measure_ckpt(kill_at=3, **kw)}
+    else:
+        rec = {"chaos": measure_chaos(), "ckpt": measure_ckpt()}
+    write_record(rec, out)
+    ch, ck = rec["chaos"], rec["ckpt"]
+    emit("resilience/chaos_serve", ch["faulted"]["wall_s"] * 1e6,
+         f"overhead={ch['overhead_ratio']:.3f};"
+         f"bit_identical={ch['unfaulted_bit_identical']};"
+         f"executables={ch['faulted']['compiled_executables']}")
+    emit("resilience/ckpt_resume", ck["wall_s_resume"] * 1e6,
+         f"ckpt_overhead={ck['checkpoint_overhead_ratio']:.3f};"
+         f"resume_fraction={ck['resume_wall_fraction']:.3f};"
+         f"reserved={ck['reserved_unfinished']}")
+
+
+if __name__ == "__main__":
+    main()

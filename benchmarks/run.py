@@ -24,6 +24,7 @@ from benchmarks import (
     kernel_microbench,
     lm_roofline,
     multilevel_c2f,
+    resilience_suite,
     table1_scaling,
     table3_incompressible,
     table5_beta,
@@ -41,6 +42,7 @@ TABLES = {
     "cohort": cohort_suite.main,
     "autotune": autotune_suite.main,
     "blocks": blocks_suite.main,
+    "resilience": resilience_suite.main,
 }
 
 

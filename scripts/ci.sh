@@ -29,6 +29,27 @@ bash scripts/smoke.sh
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.analysis.trace_report --validate results/smoke_trace.jsonl > /dev/null
 
+# chaos gate: the smoke chaos cell must have left typed FaultEvent /
+# RecoveryEvent records in the trace, and each must individually pass the
+# versioned schema (a drifted chaos emitter fails here, not in a consumer)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json
+
+from repro import telemetry
+
+recs = [json.loads(l) for l in open("results/smoke_trace.jsonl") if l.strip()]
+faults = [r for r in recs if r.get("kind") == "fault"]
+recov = [r for r in recs if r.get("kind") == "recovery"]
+assert faults, "smoke trace has no FaultEvent (chaos cell missing?)"
+assert recov, "smoke trace has no RecoveryEvent (retry never recorded?)"
+assert any(r["fault"] == "nan_injection" for r in faults), faults
+assert any(r["action"] == "retry_degraded" for r in recov), recov
+for r in faults + recov:
+    problems = telemetry.validate_record(r)
+    assert not problems, (r["kind"], problems)
+print(f"chaos gate OK: {len(faults)} fault / {len(recov)} recovery events validated")
+EOF
+
 # autotune cache gate: the tuning cache the smoke sweep just wrote (and any
 # cache a developer committed by mistake) must pass the schema/knob
 # allowlist — a corrupt or stale cache is a silent perf bug, not a crash

@@ -47,6 +47,12 @@ BENCH_BLOCKS_TOY=1 python -m benchmarks.run --suite blocks
 # results/autotune_toy.json (gitignored)
 BENCH_AUTOTUNE_TOY=1 python -m benchmarks.run --suite autotune
 
+# toy-size resilience suite: NaN-injected serve vs healthy baseline
+# (un-faulted bit-identical, ONE executable) plus kill+resume — writes
+# results/BENCH_resilience_toy.json (gitignored) and asserts the chaos
+# invariants on every run
+BENCH_RESILIENCE_TOY=1 python -m benchmarks.run --suite resilience
+
 # telemetry trace (ISSUE 7): the 2-level registration below and a toy
 # 6-job/3-slot serve session both write results/smoke_trace.jsonl; the
 # trace_report CLI renders it and ci.sh schema-validates every record
@@ -80,6 +86,45 @@ EOF
 # queue-wait, slot occupancy, and the step program's collective counts)
 python -m repro.launch.reg_serve --jobs 6 --slots 3 --size 12 --n-t 2 \
     --max-newton 6 --max-cg 15 --trace results/smoke_trace.jsonl
+
+# chaos cell (ISSUE 10): the same toy serve with a NaN injected into one
+# job's iterate — every job completes, the faulted one is retried ONCE
+# under the degraded policy, the un-faulted jobs are bit-identical to the
+# fault-free run, and the typed FaultEvent/RecoveryEvent land in the same
+# trace (ci.sh schema-validates them)
+python - <<'EOF'
+import numpy as np
+from repro import telemetry
+from repro.core import gauss_newton as gn
+from repro.data import synthetic
+from repro.launch.reg_serve import RegJob, serve_jobs
+from repro.resilience import health
+from repro.resilience.faults import NaNInjector
+from repro.resilience.policy import RetryPolicy
+
+cfg = gn.GNConfig(beta=1e-2, n_t=2, max_newton=6, gtol=1e-2, max_cg=15)
+probs = [synthetic.synthetic_problem(12, n_t=2, amplitude=a)
+         for a in (0.4, 0.8, 1.2)]
+jobs = lambda: [RegJob(job_id=f"job{s}", rho_R=p[0], rho_T=p[1])
+                for s, p in enumerate(probs)]
+ref = {r.job_id: r for r in serve_jobs(jobs(), cfg, slots=2)["results"]}
+fault = NaNInjector(job_id="job1", field="v", at_iteration=1)
+with telemetry.jsonl_sink("results/smoke_trace.jsonl"):
+    out = serve_jobs(jobs(), cfg, slots=2,
+                     retry=RetryPolicy(max_attempts=2), faults=[fault])
+res = {r.job_id: r for r in out["results"]}
+assert fault.fired and set(res) == set(ref)
+assert res["job1"].attempts == 2, res["job1"].attempts
+assert res["job1"].status not in health.FAILED_NAMES, res["job1"].status
+assert np.isfinite(res["job1"].v).all()
+for jid in ("job0", "job2"):
+    np.testing.assert_array_equal(res[jid].v, ref[jid].v)
+    assert res[jid].attempts == 1 and res[jid].status == ref[jid].status
+assert out["compiled_executables"] == 1, out["compiled_executables"]
+print("smoke chaos serve OK:",
+      f"faulted=job1 status={res['job1'].status} attempts=2",
+      f"executables={out['compiled_executables']}")
+EOF
 
 # render the per-phase wall/matvec/collective tables off the live trace
 python -m repro.analysis.trace_report results/smoke_trace.jsonl

@@ -142,15 +142,15 @@ class TuningCache:
         return raw["cells"]
 
     def _write(self, cells: dict) -> None:
+        # crash-safe: pid-unique temp + fsync + atomic rename, so two
+        # concurrent sweeps never tear each other's cache (the fixed-name
+        # ``.tmp`` pattern let one writer promote another's partial bytes)
+        from repro.resilience.atomic import atomic_write_json
+
         payload = {"schema": SCHEMA_VERSION, "cells": cells}
-        d = os.path.dirname(self.path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as fh:
-            json.dump(payload, fh, indent=2, sort_keys=True)
-            fh.write("\n")
-        os.replace(tmp, self.path)
+        atomic_write_json(
+            self.path, payload, indent=2, sort_keys=True, trailing_newline=True
+        )
 
     # -- entries -----------------------------------------------------------
     def get(self, cell: str) -> TunedConfig | None:

@@ -45,9 +45,10 @@ from repro.core import gauss_newton as gn
 from repro.core import objective as obj
 from repro.core.grid import Grid, make_grid
 from repro.core.spectral import SpectralOps
-from repro.launch.reg_serve import CohortServer, RegJob
+from repro.launch.reg_serve import RegJob, serve_jobs
 from repro.multilevel import transfer
 from repro.multilevel.hierarchy import MultilevelConfig
+from repro.resilience.policy import RetryPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +66,10 @@ class BlocksConfig:
     presmooth: bool = True  # spectral Gaussian on the GLOBAL pair first
     smooth_reduce: bool = False  # global spectral smooth after blending
     seam_check: bool = True  # emit the overlap-consistency report
+    # resilience: failed tiles (nonfinite/diverged/... JobResult.status)
+    # are re-served through the serve layer's degradation ladder before
+    # the blend — None keeps the historical fail-fast behavior
+    retry: RetryPolicy | None = None
 
     def __post_init__(self):
         if self.solver.beta_continuation:
@@ -166,9 +171,7 @@ def solve(
     for ext_shape, blist in buckets.items():
         bgrid = make_grid(ext_shape, grid.dtype)
         bweight = bgrid.num_points / grid.num_points
-        server = CohortServer(
-            bgrid, cfg.solver, slots=max(1, min(cfg.slots, len(blist)))
-        )
+        bucket_slots = max(1, min(cfg.slots, len(blist)))
         cold_g0 = jax.jit(_make_cold_g0(bgrid, cfg.solver))
         jobs, scales = [], {}
         with telemetry.span("blocks.extract", bucket=list(ext_shape)):
@@ -190,21 +193,34 @@ def solve(
                         block=b.index,
                     )
                 )
-        server.admit(*jobs)
+        # the serve layer owns the drain loop — and, with cfg.retry, the
+        # re-serving of failed tiles through the degradation ladder, so a
+        # NaN-poisoned tile is retried instead of blended into the field
         with telemetry.span("blocks.serve", bucket=list(ext_shape),
                             n_blocks=len(blist)):
-            bucket_results = server.run(verbose=verbose)
-        by_id = {r.job_id: r for r in bucket_results}
+            out_b = serve_jobs(
+                jobs, cfg.solver, slots=bucket_slots, verbose=verbose,
+                retry=cfg.retry, grid_dtype=grid.dtype,
+            )
+        by_id = {r.job_id: r for r in out_b["results"]}
         for b in blist:
             results_by_index[b.index] = (by_id[f"block{b.index}"], scales[b.index])
-        cohort_iterations += server.iterations
-        compiled_executables += server.compiled_executables()
+        bucket_iters = sum(
+            st["cohort_iterations"] for st in out_b["buckets"].values()
+        )
+        cohort_iterations += bucket_iters
+        compiled_executables += out_b["compiled_executables"]
         bucket_stats["x".join(map(str, ext_shape))] = {
             "blocks": len(blist),
-            "slots": server.slots,
-            "cohort_iterations": server.iterations,
-            "compiled_executables": server.compiled_executables(),
+            "slots": bucket_slots,
+            "cohort_iterations": bucket_iters,
+            "compiled_executables": out_b["compiled_executables"],
             "fine_equiv_weight": bweight,
+            "retries": sum(
+                st["jobs"]
+                for key, st in out_b["buckets"].items()
+                if st["attempt"] > 1
+            ),
         }
 
     per_block = []
@@ -229,6 +245,8 @@ def solve(
                 "fine_equiv_matvecs": float(fe),
                 "rel_gnorm": float(res.rel_gnorm),
                 "converged": bool(res.converged),
+                "status": res.status,
+                "attempts": int(res.attempts),
             }
         )
 

@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing: atomic, keep-k, async, elastic restore.
+"""Fault-tolerant checkpointing: atomic, keep-k, async, verified, elastic.
 
 * **Atomic**: writes go to ``<dir>/tmp.<step>`` then ``os.replace`` to
   ``step_<n>`` — a crash mid-save never corrupts the latest checkpoint.
@@ -6,7 +6,16 @@
 * **Async**: ``save(..., blocking=False)`` snapshots to host (device_get)
   synchronously — cheap — and writes on a daemon thread, overlapping the
   next training steps (the paper's equivalent concern: checkpointing the
-  space-time fields without stalling the solver).
+  space-time fields without stalling the solver).  Overlapping ``save``
+  calls serialize on an internal lock, and ``close()`` (or using the
+  manager as a context manager) joins the writer thread, so a process
+  that exits right after an async save still lands a complete step.
+* **Verified**: every leaf's CRC-32 is stored in ``meta.json`` and checked
+  on ``restore`` — a torn/bit-rotted step is detected instead of silently
+  resuming from garbage, and the restore *falls back* to the newest
+  intact step (counted as ``ckpt.corrupt_step`` + a ``RecoveryEvent``).
+  Checkpoints written before this scheme (no ``checksums`` key) load
+  unverified.
 * **Elastic**: checkpoints store *logical* PartitionSpecs, not device
   layouts.  ``restore(..., mesh=new_mesh, specs=...)`` re-device_puts every
   leaf onto the new mesh — restart on 256 chips from a 512-chip run (or on
@@ -20,9 +29,20 @@ import pickle
 import re
 import threading
 import time
+import zlib
 
 import jax
 import numpy as np
+
+from repro import telemetry
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A step directory failed checksum verification or did not load."""
+
+
+def _leaf_crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
 
 
 class CheckpointManager:
@@ -31,6 +51,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------------ #
     def _step_dirs(self) -> list[tuple[int, str]]:
@@ -46,37 +67,56 @@ class CheckpointManager:
         return dirs[-1][0] if dirs else None
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
+        with self._lock:
+            thread = self._thread
             self._thread = None
+        if thread is not None:
+            thread.join()
+
+    def close(self):
+        """Join any in-flight async writer.  Idempotent."""
+        self.wait()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     # ------------------------------------------------------------------ #
     def save(self, step: int, tree, metadata: dict | None = None, blocking: bool = True):
         """``tree`` is any pytree of arrays (params/opt state/rng...)."""
-        self.wait()
-        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        with self._lock:
+            self.wait()
+            host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
 
-        def _write():
-            tmp = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
-            os.makedirs(tmp, exist_ok=True)
-            leaves, treedef = jax.tree.flatten(host_tree)
-            np.savez(os.path.join(tmp, "arrays.npz"), *leaves)
-            with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
-                pickle.dump(treedef, f)
-            meta = {"step": step, "time": time.time(), **(metadata or {})}
-            with open(os.path.join(tmp, "meta.json"), "w") as f:
-                json.dump(meta, f)
-            final = os.path.join(self.dir, f"step_{step}")
-            if os.path.exists(final):  # overwrite-safe
-                os.replace(tmp, final + ".old")
-            os.replace(tmp, final)
-            self._gc()
+            def _write():
+                tmp = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
+                os.makedirs(tmp, exist_ok=True)
+                leaves, treedef = jax.tree.flatten(host_tree)
+                np.savez(os.path.join(tmp, "arrays.npz"), *leaves)
+                with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
+                    pickle.dump(treedef, f)
+                meta = {
+                    "step": step,
+                    "time": time.time(),
+                    "checksums": [_leaf_crc(a) for a in leaves],
+                    **(metadata or {}),
+                }
+                with open(os.path.join(tmp, "meta.json"), "w") as f:
+                    json.dump(meta, f)
+                final = os.path.join(self.dir, f"step_{step}")
+                if os.path.exists(final):  # overwrite-safe
+                    os.replace(final, final + ".old")
+                os.replace(tmp, final)
+                self._gc()
 
-        if blocking:
-            _write()
-        else:
-            self._thread = threading.Thread(target=_write, daemon=True)
-            self._thread.start()
+            if blocking:
+                _write()
+            else:
+                self._thread = threading.Thread(target=_write, daemon=True)
+                self._thread.start()
 
     def _gc(self):
         dirs = self._step_dirs()
@@ -91,21 +131,31 @@ class CheckpointManager:
                 shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
 
     # ------------------------------------------------------------------ #
-    def restore(self, step: int | None = None, mesh=None, specs=None):
-        """Returns (tree, meta).  With mesh+specs: elastic re-shard on load."""
-        self.wait()
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            return None, None
+    def _load_step(self, step: int, mesh=None, specs=None):
+        """Load + verify one step directory; raises CheckpointCorrupt."""
         path = os.path.join(self.dir, f"step_{step}")
-        data = np.load(os.path.join(path, "arrays.npz"))
-        leaves = [data[k] for k in data.files]
-        with open(os.path.join(path, "treedef.pkl"), "rb") as f:
-            treedef = pickle.load(f)
+        try:
+            data = np.load(os.path.join(path, "arrays.npz"))
+            leaves = [data[k] for k in data.files]
+            with open(os.path.join(path, "treedef.pkl"), "rb") as f:
+                treedef = pickle.load(f)
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+        except Exception as e:  # unreadable npz/pickle/json = corruption
+            raise CheckpointCorrupt(f"step_{step}: unreadable ({e})") from e
+        sums = meta.get("checksums")
+        if sums is not None:  # pre-checksum checkpoints load unverified
+            if len(sums) != len(leaves):
+                raise CheckpointCorrupt(
+                    f"step_{step}: {len(leaves)} leaves vs {len(sums)} checksums"
+                )
+            for i, (a, want) in enumerate(zip(leaves, sums)):
+                got = _leaf_crc(a)
+                if got != want:
+                    raise CheckpointCorrupt(
+                        f"step_{step}: leaf {i} crc32 {got:#010x} != {want:#010x}"
+                    )
         tree = jax.tree.unflatten(treedef, leaves)
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
         if mesh is not None and specs is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -116,3 +166,38 @@ class CheckpointManager:
                 [jax.device_put(a, NamedSharding(mesh, s)) for a, s in zip(arrs, spec_leaves)]
             )
         return tree, meta
+
+    def restore(self, step: int | None = None, mesh=None, specs=None):
+        """Returns (tree, meta).  With mesh+specs: elastic re-shard on load.
+
+        An explicit ``step`` is verified and raises ``CheckpointCorrupt``
+        on mismatch.  With ``step=None`` the newest step is tried first
+        and corruption falls back to the next-newest intact step — each
+        skip counted (``ckpt.corrupt_step``) and emitted as a
+        ``RecoveryEvent(action="ckpt_fallback")``.  ``(None, None)`` only
+        when the directory holds no checkpoints at all; all-corrupt
+        raises.
+        """
+        self.wait()
+        if step is not None:
+            return self._load_step(step, mesh=mesh, specs=specs)
+        dirs = self._step_dirs()
+        if not dirs:
+            return None, None
+        errors = []
+        for st, _path in reversed(dirs):
+            try:
+                tree, meta = self._load_step(st, mesh=mesh, specs=specs)
+            except CheckpointCorrupt as e:
+                errors.append(str(e))
+                telemetry.counter("ckpt.corrupt_step")
+                telemetry.emit(
+                    telemetry.RecoveryEvent(
+                        action="ckpt_fallback", step=st, attrs={"error": str(e)}
+                    )
+                )
+                continue
+            return tree, meta
+        raise CheckpointCorrupt(
+            "every checkpoint failed verification: " + "; ".join(errors)
+        )

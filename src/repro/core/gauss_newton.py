@@ -27,6 +27,7 @@ from repro.core import objective as obj
 from repro.core.grid import Grid
 from repro.core.spectral import SpectralOps
 from repro import telemetry
+from repro.resilience import health
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +92,9 @@ class NewtonLog(NamedTuple):
     cg_iters: jnp.ndarray
     step_len: jnp.ndarray
     ls_iters: jnp.ndarray | int = 0  # Armijo backtracking trials
+    # in-graph health code (``repro.resilience.health``): scalar for the
+    # single solve, per-subject (S,) for the cohort step
+    status: jnp.ndarray | int = 0
 
 
 def pcg(
@@ -320,6 +324,20 @@ def newton_iteration(
     accepted = j_new < state.j_val
     v_new = jnp.where(accepted, v + alpha * dv, v)
 
+    # in-graph health guard: classify the step (NaN/Inf, divergence, PCG
+    # breakdown) and revert a non-finite iterate to the last good one
+    status = health.classify(
+        v_in=v,
+        v_out=v_new,
+        j_val=state.j_val,
+        j_new=j_new,
+        gnorm=gnorm,
+        pcg_x=sol.x,
+        pcg_rel=sol.rel_res,
+        accepted=accepted,
+    )
+    v_new = health.freeze(v_new, v, status)
+
     log = NewtonLog(
         j_val=state.j_val,
         misfit=state.misfit,
@@ -328,6 +346,7 @@ def newton_iteration(
         cg_iters=sol.iters,
         step_len=jnp.where(accepted, alpha, 0.0),
         ls_iters=ls_it,
+        status=status,
     )
     return v_new, log
 
@@ -374,6 +393,7 @@ def solve(
     # static per-application cost of a multigrid precond (0.0 for spectral)
     pc_cost = float(getattr(precond, "fine_equiv_cost", 0.0))
     total_precond_fe = 0.0
+    status_code = health.OK
 
     for beta in betas:
         prob = obj.Problem(
@@ -406,6 +426,7 @@ def solve(
             total_matvecs += int(log.cg_iters)
             total_newton += 1
             total_precond_fe += (int(log.cg_iters) + 1) * pc_cost
+            status_code = int(log.status)
             rec = {
                 "beta": float(beta),
                 "iter": it,
@@ -417,6 +438,7 @@ def solve(
                 "cg_iters": int(log.cg_iters),
                 "step": float(log.step_len),
                 "armijo_trials": int(log.ls_iters),
+                "status": health.status_name(status_code),
             }
             history.append(rec)
             if callback:
@@ -441,8 +463,29 @@ def solve(
                 ),
                 echo=verbose,
             )
+            if health.is_failure(status_code):
+                # a NaN-poisoned / diverging / broken-down solve will not
+                # heal by iterating further: stop the stage, surface the
+                # reason, and let the caller's retry policy take over
+                telemetry.counter(
+                    "resilience.guard_tripped", status=rec["status"], source="gn.solve"
+                )
+                break
             if rec["rel_gnorm"] <= cfg.gtol or rec["step"] == 0.0:
                 break
+        if health.is_failure(status_code):
+            break
+
+    # final status of the last beta stage (host maps convergence/iteration
+    # cap onto the codes the in-graph guard cannot decide)
+    if history and health.is_failure(status_code):
+        final_status = history[-1]["status"]
+    elif history and history[-1]["rel_gnorm"] <= cfg.gtol:
+        final_status = health.status_name(health.CONVERGED)
+    elif history and history[-1]["step"] == 0.0:
+        final_status = health.status_name(health.STAGNATED)
+    else:
+        final_status = health.status_name(health.MAX_NEWTON)
 
     telemetry.emit(
         telemetry.SolveEvent(
@@ -460,6 +503,7 @@ def solve(
         "newton_iters": total_newton,
         "hessian_matvecs": total_matvecs,
         "precond_fine_equiv_matvecs": total_precond_fe,
+        "status": final_status,
     }
 
 
@@ -555,6 +599,23 @@ def newton_iteration_cohort(
     accepted = active & (j_new < state.j_val)
     v_new = jnp.where(bc(accepted), v + bc(alpha) * dv, v)
 
+    # per-subject in-graph health guard: the reductions keep the subjects
+    # axis, and a sick subject's iterate is frozen so its NaNs never feed
+    # the cohort's shared transform rides on the next step
+    status = health.classify(
+        v_in=v,
+        v_out=v_new,
+        j_val=state.j_val,
+        j_new=j_new,
+        gnorm=gnorm,
+        pcg_x=sol.x,
+        pcg_rel=sol.rel_res,
+        accepted=accepted,
+        active=active,
+        axes=tuple(range(1, v.ndim)),
+    )
+    v_new = health.freeze(v_new, v, status)
+
     log = NewtonLog(
         j_val=state.j_val,
         misfit=state.misfit,
@@ -563,6 +624,7 @@ def newton_iteration_cohort(
         cg_iters=sol.iters,
         step_len=jnp.where(accepted, alpha, 0.0),
         ls_iters=ls_it,  # shared lockstep halvings (scalar, not per-subject)
+        status=status,
     )
     return v_new, log
 
@@ -671,9 +733,13 @@ def solve_cohort(
     history: list[dict] = []
     newton_counts = np.zeros(S, np.int64)
     cg_counts = np.zeros(S, np.int64)
+    status_codes = np.zeros(S, np.int64)
 
     for beta in betas:
         stage_act = active0
+        # every stage re-activates its subjects; final statuses are the
+        # final stage's retirement reasons
+        status_codes[np.asarray(active0)] = health.OK
         g0 = None if g0_ref is None else jnp.full((S,), g0_ref, jnp.float32)
         g_forcing = jnp.full((S,), 1e-30, jnp.float32)
         have_forcing = False
@@ -694,8 +760,25 @@ def solve_cohort(
             cg_counts += np.asarray(log.cg_iters, np.int64)
             rel = np.asarray(log.gnorm) / np.maximum(np.asarray(g0), 1e-30)
             step = np.asarray(log.step_len)
-            done = act_np & ((rel <= cfg.gtol) | (step == 0.0))
+            code = np.asarray(log.status, np.int64)
+            failed = act_np & np.isin(code, health.FAILED_CODES)
+            done = act_np & ((rel <= cfg.gtol) | (step == 0.0) | failed)
             stage_act = jnp.asarray(act_np & ~done)
+            # retirement-reason bookkeeping (host decides converged/stagnated;
+            # the in-graph guard decides the failure modes)
+            status_codes[failed] = code[failed]
+            conv = done & ~failed & (rel <= cfg.gtol)
+            status_codes[conv] = health.CONVERGED
+            stag = done & ~failed & ~conv
+            status_codes[stag] = np.where(
+                code[stag] == health.OK, health.STAGNATED, code[stag]
+            )
+            if failed.any():
+                telemetry.counter(
+                    "resilience.guard_tripped",
+                    value=int(failed.sum()),
+                    source="gn.solve_cohort",
+                )
             rec = {
                 "beta": float(beta),
                 "iter": it,
@@ -708,6 +791,7 @@ def solve_cohort(
                 "step": [float(x) for x in step],
                 "active": [bool(x) for x in act_np],
                 "armijo_trials": int(log.ls_iters),
+                "status": [int(x) for x in code],
             }
             history.append(rec)
             if callback:
@@ -732,6 +816,10 @@ def solve_cohort(
                 echo=verbose,
             )
 
+    # subjects still live after the final stage exhausted max_newton
+    act0_np = np.asarray(active0)
+    status_codes[act0_np & (status_codes == health.OK)] = health.MAX_NEWTON
+
     out = {
         "v": v,
         "history": history,
@@ -741,6 +829,7 @@ def solve_cohort(
         "fine_equiv_matvecs": [float(x) for x in cg_counts],
         "active": [bool(x) for x in np.asarray(active0)],
         "compiled_executables": int(step_fn._cache_size()),
+        "status": [health.status_name(c) for c in status_codes],
     }
     telemetry.emit(
         telemetry.SolveEvent(

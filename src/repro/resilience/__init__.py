@@ -1,0 +1,45 @@
+"""``repro.resilience`` — fault-tolerant solve & serve (ISSUE 10 tentpole).
+
+Four legs, threaded through the solver, server, and blocks layers:
+
+* **In-graph health guards** (``health.py``): per-subject status codes
+  computed inside the jitted Newton step — NaN/Inf detection, line-search
+  divergence vs stagnation, PCG breakdown — with sick subjects frozen at
+  their last good iterate.  All traced ops: the guard cannot recompile a
+  serving bucket.
+* **Retry with graceful degradation** (``policy.py``): failed jobs are
+  re-admitted under a backoff ladder of safer knobs (larger beta, f32
+  fields, deeper line search, exact gather interp).  A beta-only rung
+  re-uses the failing bucket's compiled executable.
+* **Checkpointed job streams**: ``launch.reg_serve.serve_jobs`` snapshots
+  its servers through ``ckpt.manager.CheckpointManager`` and resumes a
+  killed stream re-serving only unfinished jobs (billing preserved).
+* **Fault injection** (``faults.py``): deterministic NaN injection,
+  kill-at-step, and halo-budget overflow — the chaos harness behind
+  ``tests/test_resilience.py`` and ``--suite resilience``.
+
+``atomic.py`` is the shared crash-safe JSON writer (unique temp + fsync +
+``os.replace``) adopted by the tuning cache and the benchmark records.
+"""
+from repro.resilience import health
+from repro.resilience.atomic import atomic_write_json
+from repro.resilience.faults import (
+    KillAt,
+    NaNInjector,
+    SimulatedCrash,
+    overflow_displacement,
+)
+from repro.resilience.policy import DEFAULT_LADDER, DegradeRung, RetryPolicy, static_key
+
+__all__ = [
+    "health",
+    "atomic_write_json",
+    "KillAt",
+    "NaNInjector",
+    "SimulatedCrash",
+    "overflow_displacement",
+    "DEFAULT_LADDER",
+    "DegradeRung",
+    "RetryPolicy",
+    "static_key",
+]

@@ -1,0 +1,60 @@
+"""Crash-safe JSON writes: unique temp file + fsync + ``os.replace``.
+
+The one atomic-write idiom behind every durable JSON artifact
+(``autotune/cache.py``, ``benchmarks/common.write_record``, checkpoint
+metadata).  Two hazards the naive ``open(path, "w")`` — and even the
+fixed-name ``path + ".tmp"`` pattern — leave open:
+
+* a killed process truncates/tears the REAL file (naive write), or two
+  concurrent writers share one temp name and one promotes the other's
+  half-written bytes (fixed-name temp) — either way the next run reads
+  torn JSON and counts it as corrupt (``autotune.cache_invalid``);
+* a replace without ``fsync`` can be reordered by the filesystem so the
+  rename lands before the data blocks, leaving an empty file after a
+  power cut.
+
+``atomic_write_json`` sidesteps both: the temp name is pid-unique, the
+file is fsynced before the rename, the rename is atomic, and the temp is
+unlinked on any failure.  Stdlib-only on purpose — importable from the
+dependency-light leaves (``repro.autotune.cache`` allows itself nothing
+beyond the stdlib + telemetry).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def atomic_write_json(
+    path: str,
+    payload,
+    *,
+    indent: int | None = 2,
+    sort_keys: bool = False,
+    default=None,
+    trailing_newline: bool = False,
+) -> None:
+    """Serialize ``payload`` to ``path`` so that ``path`` always holds
+    either its previous contents or the complete new JSON — never a torn
+    intermediate, regardless of kills or concurrent writers."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as fh:
+            json.dump(payload, fh, indent=indent, sort_keys=sort_keys, default=default)
+            if trailing_newline:
+                fh.write("\n")
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+    finally:
+        # exception path (serialization error, kill between write and
+        # replace on THIS code path cannot be caught — but its leftover is
+        # the pid-unique temp, never the real file)
+        if os.path.exists(tmp):
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass

@@ -1,0 +1,123 @@
+"""Deterministic fault injection: the chaos harness behind the resilience
+tests, the smoke chaos cell, and ``--suite resilience``.
+
+Faults are host-side **server hooks**: a ``CohortServer`` calls every
+entry of ``server.hooks`` at the top of each ``step()``, so an injector
+can mutate slot state (NaN-poison an iterate or an image) or abort the
+loop (simulated process kill) at an exact, reproducible iteration —
+without touching the compiled step program (the one-executable pin holds
+under injection).  Every firing emits a typed ``FaultEvent`` plus a
+``resilience.faults_injected`` counter, so a chaos trace is auditable.
+
+``overflow_displacement`` manufactures the third ISSUE fault — a
+semi-Lagrangian displacement that exceeds a given halo budget — for the
+``make_checked_interp`` overflow tests (NaN-poison event + exact gather
+fallback, ``tests/test_dist_interp.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro import telemetry
+
+COUNTER_INJECTED = "resilience.faults_injected"
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by ``KillAt`` — stands in for a killed serve process."""
+
+
+@dataclasses.dataclass
+class NaNInjector:
+    """Poison one subject's state at one exact server iteration.
+
+    ``field``: ``"v"`` (the slot iterate — a mid-flight corruption),
+    ``"rho_R"`` / ``"rho_T"`` (a bad input image).  ``element=None``
+    poisons the whole field; an index tuple poisons one entry (enough —
+    any NaN trips the in-graph guard).  Fires once.
+    """
+
+    job_id: Any
+    field: str = "v"
+    at_iteration: int = 1
+    element: tuple | None = None
+    fired: bool = dataclasses.field(default=False, init=False)
+
+    def __call__(self, server) -> None:
+        if self.fired or server.iterations != self.at_iteration:
+            return
+        slot = next(
+            (
+                s
+                for s, job in enumerate(server._jobs)
+                if job is not None and job.job_id == self.job_id
+            ),
+            None,
+        )
+        if slot is None:
+            return
+        import jax.numpy as jnp
+
+        attr = {"v": "_v", "rho_R": "_rho_R", "rho_T": "_rho_T"}[self.field]
+        arr = getattr(server, attr)
+        if self.element is None:
+            arr = arr.at[slot].set(jnp.nan)
+        else:
+            arr = arr.at[(slot,) + tuple(self.element)].set(jnp.nan)
+        setattr(server, attr, arr)
+        self.fired = True
+        telemetry.emit(
+            telemetry.FaultEvent(
+                fault="nan_injection",
+                target=str(self.job_id),
+                iteration=int(server.iterations),
+                attrs={"field": self.field, "slot": slot,
+                       "element": list(self.element) if self.element else None},
+            )
+        )
+        telemetry.counter(COUNTER_INJECTED, fault="nan_injection")
+
+
+@dataclasses.dataclass
+class KillAt:
+    """Abort the serve loop at an exact iteration (after any checkpoint of
+    the previous step has been written) by raising ``SimulatedCrash`` —
+    the deterministic stand-in for ``kill -9`` mid-stream.  The resume
+    test restarts from the latest snapshot and must re-serve only the
+    jobs the checkpoint had not completed."""
+
+    at_iteration: int
+    fired: bool = dataclasses.field(default=False, init=False)
+
+    def __call__(self, server) -> None:
+        if self.fired or server.iterations < self.at_iteration:
+            return
+        self.fired = True
+        telemetry.emit(
+            telemetry.FaultEvent(
+                fault="kill", target="serve_loop", iteration=int(server.iterations)
+            )
+        )
+        telemetry.counter(COUNTER_INJECTED, fault="kill")
+        raise SimulatedCrash(f"simulated kill at serve iteration {server.iterations}")
+
+
+def overflow_displacement(shape, halo: int, excess: float = 2.5, dtype=np.float32):
+    """A smooth constant displacement whose magnitude exceeds ``halo`` by
+    ``excess`` voxels on every axis — guaranteed to trip the dynamic halo
+    budget (``ceil(max|disp|) > halo``) while staying exactly
+    interpolable by the global-gather fallback (periodic wrap)."""
+    mag = float(halo) + float(excess)
+    d = np.full((3,) + tuple(shape), mag, dtype=dtype)
+    telemetry.emit(
+        telemetry.FaultEvent(
+            fault="halo_overflow",
+            target=f"halo={halo}",
+            attrs={"magnitude": mag, "shape": list(shape)},
+        )
+    )
+    telemetry.counter(COUNTER_INJECTED, fault="halo_overflow")
+    return d

@@ -1,0 +1,137 @@
+"""In-graph health guards: per-subject status codes for the GN iteration.
+
+CLAIRE (arXiv 1808.04487) documents the solver's real-world failure
+modes — line-search stagnation, ill-conditioned Hessians at small beta,
+non-finite fields from bad inputs — and its GPU successor (2401.17493)
+handles them with parameter continuation/backoff.  This module is the
+detection half of that machinery for our cohort-served path: a small set
+of integer **status codes** computed *inside* the jitted Newton step
+(``gn.newton_iteration`` / ``newton_iteration_cohort``), so that
+
+* a subject whose gradient/objective/iterate goes NaN/Inf is caught the
+  same iteration (``NONFINITE``) and **frozen at its last good iterate**
+  (``freeze``) instead of propagating NaNs through the shared transform
+  rides of the cohort;
+* an exhausted Armijo search is split into benign ``STAGNATED`` (no
+  usable decrease left) vs ``DIVERGED`` (objective *increased* past
+  ``DIVERGE_RTOL`` even at the smallest trial step — the silent
+  max_newton spin the ISSUE motivation names);
+* a PCG recursion that broke down (non-finite direction or residual from
+  an indefinite/ill-conditioned system) is tagged ``PCG_BREAKDOWN``.
+
+Everything here is traced ``jnp`` ops on values the step already
+computes — no new static arguments, no host round trips — so adding the
+guard cannot recompile a serving bucket (the one-executable pin of
+``tests/test_cohort.py`` / ``tests/test_resilience.py``).
+
+The host side (``gn.solve``/``solve_cohort`` drivers, the
+``launch.reg_serve.CohortServer`` retirement loop) reads the codes off
+``NewtonLog.status`` and maps them to the string reasons carried by
+``JobResult.status`` / ``JobEvent.status`` — which is what the retry
+machinery (``repro.resilience.policy``) triggers on.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---- status codes (int32 in-graph; stable contract for telemetry) ---------
+OK = 0  # still iterating
+CONVERGED = 1  # rel gradient norm under gtol (host-side test)
+STAGNATED = 2  # zero-step exit: Armijo exhausted without a decrease
+MAX_NEWTON = 3  # iteration cap reached without convergence (host-side)
+NONFINITE = 4  # NaN/Inf in gradient/objective/iterate
+DIVERGED = 5  # Armijo exhausted AND the objective increased
+PCG_BREAKDOWN = 6  # non-finite Newton direction / PCG residual
+
+STATUS_NAMES = {
+    OK: "in_progress",
+    CONVERGED: "converged",
+    STAGNATED: "stagnated",
+    MAX_NEWTON: "max_newton",
+    NONFINITE: "nonfinite",
+    DIVERGED: "diverged",
+    PCG_BREAKDOWN: "pcg_breakdown",
+}
+
+# statuses that mean "this solve went wrong", not "this solve finished":
+# the default retry triggers (max_newton added by RetryPolicy.retry_on)
+FAILED_NAMES = ("nonfinite", "diverged", "pcg_breakdown")
+FAILED_CODES = (NONFINITE, DIVERGED, PCG_BREAKDOWN)
+
+# relative objective increase at the last Armijo trial above which an
+# exhausted line search counts as divergence rather than stagnation
+# (roundoff-level increases at a converged point must stay STAGNATED)
+DIVERGE_RTOL = 1e-3
+
+
+def status_name(code) -> str:
+    return STATUS_NAMES.get(int(code), f"status{int(code)}")
+
+
+def is_failure(code) -> bool:
+    return int(code) in FAILED_CODES
+
+
+def _all_finite(x, axes):
+    """Per-subject (or scalar) all-finite reduction over ``axes``."""
+    return jnp.all(jnp.isfinite(x), axis=axes)
+
+
+def classify(
+    *,
+    v_in,
+    v_out,
+    j_val,
+    j_new,
+    gnorm,
+    pcg_x,
+    pcg_rel,
+    accepted,
+    active=True,
+    axes=None,
+):
+    """Traced status classification for one Newton step.
+
+    Shape-polymorphic: with ``axes=None`` every reduction is global and
+    the result is a scalar status (the single-solve path); with
+    ``axes=(1, 2, 3, 4)`` reductions keep the leading subjects axis and
+    the result is a per-subject ``(S,)`` int32 vector (the cohort path).
+
+    Precedence (strongest wins): NONFINITE > PCG_BREAKDOWN > DIVERGED >
+    STAGNATED > OK.  Convergence and the iteration cap are host-side
+    decisions (they need ``g0``/``max_newton`` bookkeeping the step does
+    not carry) — the host maps them onto CONVERGED / MAX_NEWTON.
+    """
+    active = jnp.asarray(active, bool)
+    state_finite = jnp.isfinite(j_val) & jnp.isfinite(gnorm) & _all_finite(v_in, axes)
+    pcg_finite = _all_finite(pcg_x, axes) & jnp.isfinite(pcg_rel)
+    out_finite = _all_finite(v_out, axes) & jnp.isfinite(j_new)
+
+    # exhausted line search: accepted==False always comes from an Armijo
+    # loop that hit its cap (a satisfied Armijo condition with a descent
+    # direction implies a decrease, hence acceptance)
+    scale = jnp.maximum(jnp.abs(j_val), 1e-30)
+    increased = (j_new - j_val) > DIVERGE_RTOL * scale
+
+    status = jnp.where(
+        active & ~accepted, jnp.where(increased, DIVERGED, STAGNATED), OK
+    )
+    status = jnp.where(active & state_finite & ~pcg_finite, PCG_BREAKDOWN, status)
+    status = jnp.where(
+        active & ~(state_finite & out_finite), NONFINITE, status
+    )
+    return status.astype(jnp.int32)
+
+
+def freeze(v_new, v_old, status):
+    """Freeze unhealthy subjects at their last good iterate.
+
+    ``v_new`` already equals ``v_old`` for a rejected step; this guard
+    additionally reverts any iterate that picked up a non-finite value
+    through an *accepted* step, so downstream consumers (shared transform
+    rides, the blend of ``repro.blocks``) never see NaN/Inf from a sick
+    subject.  No-op (bitwise) for healthy subjects.
+    """
+    sick = status == NONFINITE
+    sick = sick.reshape(sick.shape + (1,) * (v_new.ndim - sick.ndim))
+    return jnp.where(sick, v_old, v_new)

@@ -1,0 +1,117 @@
+"""Retry with graceful degradation: the backoff ladder for failed solves.
+
+GPU-CLAIRE (arXiv 2401.17493) recovers from line-search stagnation and
+ill-conditioned Hessians by *parameter continuation/backoff* — re-solving
+under safer knobs instead of failing the job.  ``RetryPolicy`` is that
+machinery for the serving path: a failed job (``JobResult.status`` in
+``retry_on``) is re-admitted up to ``max_attempts`` times, each attempt
+under the next **rung** of a degradation ladder:
+
+* ``beta_scale`` — a larger regularization weight (better-conditioned
+  Hessian, smoother velocity; the primary CLAIRE backoff lever).  Because
+  ``beta`` is a *traced* scalar of the cohort step, a beta-only rung
+  re-uses the failing bucket's compiled executable — retry churn never
+  recompiles (pinned by ``tests/test_resilience.py``).
+* ``field_dtype`` — force full-f32 fields (undo a bf16 storage knob that
+  may have underflowed/overflowed).
+* ``max_line_search`` — a deeper Armijo backtracking budget (tighter
+  line search: smaller accepted steps become reachable).
+* ``interp_method="ref"`` — the exact global-gather interpolation path
+  (the planned "gather" fallback of the halo budget), immune to
+  halo-budget overflow for any displacement.
+
+Rungs are expressed relative to the job's *base* config, not cumulatively,
+so ``degraded(cfg, attempt)`` is a pure function — the checkpoint/resume
+path re-derives a degraded bucket's config from ``(base cfg, attempt)``
+alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.resilience import health
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeRung:
+    """One ladder step: knob overrides applied to the base ``GNConfig``.
+
+    ``None`` leaves the base value alone.  ``beta_scale`` multiplies the
+    base beta (and each entry of ``beta_continuation``, though served
+    configs reject continuation anyway)."""
+
+    beta_scale: float = 10.0
+    field_dtype: str | None = None
+    interp_method: str | None = None
+    max_line_search: int | None = None
+    max_cg: int | None = None
+
+
+#: attempt 2: safer beta only — shares the primary bucket's executable.
+#: attempt 3+: full degradation — f32 fields, exact gather interp, deeper
+#: line search (a new, deliberately conservative executable).
+DEFAULT_LADDER = (
+    DegradeRung(beta_scale=10.0),
+    DegradeRung(
+        beta_scale=100.0,
+        field_dtype="float32",
+        interp_method="ref",
+        max_line_search=20,
+    ),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How failed jobs are re-admitted.
+
+    ``retry_on`` are the ``JobResult.status`` strings that trigger a
+    retry; anything else (``converged``, ``stagnated`` by default) retires
+    normally.  ``warm_start=True`` seeds the retry from the failed
+    attempt's last good iterate when it is finite (the freeze guard makes
+    it so unless the job was poisoned before its first step), else from
+    the job's original ``v0``.
+    """
+
+    max_attempts: int = 2
+    retry_on: tuple[str, ...] = health.FAILED_NAMES + ("max_newton",)
+    ladder: tuple[DegradeRung, ...] = DEFAULT_LADDER
+    warm_start: bool = True
+
+    def rung(self, attempt: int) -> DegradeRung:
+        """Ladder rung for ``attempt`` (attempt 1 is the undegraded solve)."""
+        if attempt < 2:
+            raise ValueError(f"attempt {attempt} is not a retry")
+        return self.ladder[min(attempt - 2, len(self.ladder) - 1)]
+
+    def degraded(self, cfg: Any, attempt: int) -> Any:
+        """The ``GNConfig`` for retry ``attempt`` of a job served under
+        ``cfg``.  Pure in ``(cfg, attempt)`` — resume re-derives it."""
+        if attempt <= 1:
+            return cfg
+        rung = self.rung(attempt)
+        updates: dict[str, Any] = {
+            "beta": cfg.beta * rung.beta_scale,
+            "beta_continuation": tuple(
+                b * rung.beta_scale for b in cfg.beta_continuation
+            ),
+        }
+        if rung.field_dtype is not None:
+            updates["field_dtype"] = rung.field_dtype
+        if rung.interp_method is not None:
+            updates["interp_method"] = rung.interp_method
+        if rung.max_line_search is not None:
+            updates["max_line_search"] = max(cfg.max_line_search, rung.max_line_search)
+        if rung.max_cg is not None:
+            updates["max_cg"] = rung.max_cg
+        return dataclasses.replace(cfg, **updates)
+
+
+def static_key(cfg: Any) -> Any:
+    """Executable-identity key of a ``GNConfig``: everything *compiled into*
+    the cohort step.  ``beta`` is a traced argument of the step, so two
+    configs differing only in beta share one compiled executable — the
+    serve layer keys its ``step_fn`` cache on this, which is what lets a
+    beta-only degrade rung retry through the original program."""
+    return dataclasses.replace(cfg, beta=0.0, beta_continuation=())

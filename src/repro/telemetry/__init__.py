@@ -29,10 +29,12 @@ from repro.telemetry.events import (
     CollectivesEvent,
     CounterEvent,
     Event,
+    FaultEvent,
     JobEvent,
     LevelEvent,
     LevelStartEvent,
     NewtonIterEvent,
+    RecoveryEvent,
     ServeStepEvent,
     SolveEvent,
     SpanEvent,
@@ -69,6 +71,8 @@ __all__ = [
     "CollectivesEvent",
     "BenchEvent",
     "SolveEvent",
+    "FaultEvent",
+    "RecoveryEvent",
     "validate_record",
     "span",
     "annotate",

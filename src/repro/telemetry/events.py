@@ -141,6 +141,12 @@ class JobEvent(Event):
     # tile index when the job is one block of a repro.blocks partition —
     # per-block billing rides the same record (None for plain jobs)
     block: list | None = None
+    # ISSUE 10: the explicit retirement reason ("converged" | "stagnated" |
+    # "max_newton" | "nonfinite" | "diverged" | "pcg_breakdown") — what the
+    # boolean ``converged`` used to conflate — and which serve attempt this
+    # record bills (1 = the original admission, >1 = a degraded retry)
+    status: str = ""
+    attempts: int = 1
 
 
 @dataclasses.dataclass
@@ -185,6 +191,31 @@ class BenchEvent(Event):
 
 
 @dataclasses.dataclass
+class FaultEvent(Event):
+    """One injected (or detected) fault: the chaos harness's audit record
+    (``repro.resilience.faults``) and the serve layer's guard trips."""
+
+    kind: ClassVar[str] = "fault"
+    fault: str  # "nan_injection" | "kill" | "halo_overflow" | "guard_trip"
+    target: str = ""  # job id / field / loop the fault hit
+    iteration: int | None = None
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class RecoveryEvent(Event):
+    """One recovery action taken by the resilience machinery."""
+
+    kind: ClassVar[str] = "recovery"
+    # "retry_degraded" | "resume_from_checkpoint" | "ckpt_fallback"
+    action: str
+    job_id: str | None = None
+    attempts: int | None = None  # attempt number the action admits/bills
+    step: int | None = None  # checkpoint step / serve iteration involved
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
 class SolveEvent(Event):
     """End-of-solve summary: the meters ``gn.solve``/``solve_cohort`` return."""
 
@@ -203,6 +234,7 @@ EVENT_KINDS = {
     for cls in (
         SpanEvent, NewtonIterEvent, LevelEvent, LevelStartEvent, JobEvent,
         ServeStepEvent, CounterEvent, CollectivesEvent, BenchEvent, SolveEvent,
+        FaultEvent, RecoveryEvent,
     )
 }
 

@@ -1,5 +1,7 @@
 """Checkpoint manager: atomicity, keep-k, async, elastic restore, bit-exact
-resume (fault-tolerance deliverable)."""
+resume, checksum verification + corrupt-step fallback (fault-tolerance
+deliverable)."""
+import json
 import os
 
 import jax
@@ -7,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.ckpt.manager import CheckpointManager
+from repro.ckpt.manager import CheckpointCorrupt, CheckpointManager
 from repro.configs import get_smoke_config
 from repro.data.tokens import TokenStream
 from repro.models.common import ShardRules
@@ -59,6 +61,104 @@ def test_elastic_restore_respec(tmp_path, rng, single_mesh):
     out, _ = mgr.restore(1, mesh=single_mesh, specs={"w": P("data", None)})
     np.testing.assert_array_equal(out["w"], tree["w"])
     assert out["w"].sharding.spec == P("data", None)
+
+
+def test_close_joins_async_writer(tmp_path, rng):
+    """close() (and the context manager) joins the writer thread, so an
+    async save issued right before process exit still lands complete."""
+    tree = _tree(rng)
+    with CheckpointManager(str(tmp_path), keep=3) as mgr:
+        mgr.save(1, tree, blocking=False)
+    # context exit == close(): the step directory is fully written
+    assert mgr.latest_step() == 1
+    out, meta = CheckpointManager(str(tmp_path)).restore()
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    mgr.close()  # idempotent
+
+
+def test_overlapping_async_saves_serialize(tmp_path, rng):
+    """Back-to-back non-blocking saves never interleave writers: every
+    step lands intact and verified."""
+    mgr = CheckpointManager(str(tmp_path), keep=0)
+    trees = {s: _tree(rng) for s in range(1, 6)}
+    for s, tree in trees.items():
+        mgr.save(s, tree, blocking=False)
+    mgr.close()
+    for s, tree in trees.items():
+        out, meta = mgr.restore(s)
+        assert meta["step"] == s
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(a, b)
+
+
+def _corrupt_step(tmp_path, step):
+    """Flip bytes inside the npz payload of a step directory."""
+    path = os.path.join(str(tmp_path), f"step_{step}", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.seek(-8, os.SEEK_END)
+        f.write(b"\xde\xad\xbe\xef\xde\xad\xbe\xef")
+
+
+def test_checksum_detects_corruption(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=0)
+    mgr.save(1, _tree(rng))
+    meta = json.load(open(os.path.join(str(tmp_path), "step_1", "meta.json")))
+    assert "checksums" in meta and len(meta["checksums"]) == 3
+    _corrupt_step(tmp_path, 1)
+    with pytest.raises(CheckpointCorrupt):
+        mgr.restore(1)  # explicit step: strict
+
+
+def test_restore_falls_back_over_corrupt_steps(tmp_path, rng):
+    """Latest-step restore skips corrupt steps (counted + RecoveryEvent)
+    and resumes from the newest intact one; all-corrupt raises."""
+    from repro import telemetry
+
+    mgr = CheckpointManager(str(tmp_path), keep=0)
+    trees = {s: _tree(rng) for s in (1, 2, 3)}
+    for s, tree in trees.items():
+        mgr.save(s, tree)
+    _corrupt_step(tmp_path, 3)
+
+    before = telemetry.counters().get("ckpt.corrupt_step", 0)
+    with telemetry.ListSink() as sink:
+        out, meta = mgr.restore()
+    assert meta["step"] == 2  # fell back past the torn newest step
+    for a, b in zip(jax.tree.leaves(trees[2]), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(a, b)
+    assert telemetry.counters().get("ckpt.corrupt_step", 0) == before + 1
+    recov = [r for r in sink.records if r["kind"] == "recovery"]
+    assert recov and recov[0]["action"] == "ckpt_fallback" and recov[0]["step"] == 3
+
+    _corrupt_step(tmp_path, 1)
+    _corrupt_step(tmp_path, 2)
+    with pytest.raises(CheckpointCorrupt):
+        mgr.restore()
+
+
+def test_pre_checksum_checkpoints_load_unverified(tmp_path, rng):
+    """A checkpoint written before the checksum scheme (no ``checksums``
+    key) still restores."""
+    mgr = CheckpointManager(str(tmp_path), keep=0)
+    tree = _tree(rng)
+    mgr.save(1, tree)
+    meta_path = os.path.join(str(tmp_path), "step_1", "meta.json")
+    meta = json.load(open(meta_path))
+    del meta["checksums"]
+    json.dump(meta, open(meta_path, "w"))
+    out, _ = mgr.restore()
+    np.testing.assert_array_equal(out["a"], tree["a"])
+
+
+def test_same_step_overwrite(tmp_path, rng):
+    """Re-saving an existing step replaces it atomically (the serve layer
+    writes its final session snapshot onto the last periodic one)."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(2, {"x": jnp.zeros(3)})
+    tree = {"x": jnp.arange(3.0)}
+    mgr.save(2, tree)
+    out, meta = mgr.restore(2)
+    np.testing.assert_array_equal(out["x"], tree["x"])
 
 
 @pytest.mark.slow

@@ -114,6 +114,31 @@ def test_serve_refill_one_executable(cohort_and_singles):
         assert dv / ref < 5e-4, s
 
 
+def test_retirement_status_splits_converged_from_max_newton(cohort_and_singles):
+    """Regression for the JobResult.converged=False conflation: the explicit
+    ``status`` field distinguishes a clean convergence from an iteration-cap
+    exit (and JobEvent carries the same reason)."""
+    from repro.launch.reg_serve import CohortServer, RegJob
+    from repro import telemetry
+
+    grid, rho_R, rho_T, _, _ = cohort_and_singles
+    # iteration cap too small to converge the hardest subject
+    capped = gn.GNConfig(beta=1e-2, n_t=2, max_newton=1, gtol=1e-6, max_cg=20)
+    server = CohortServer(grid, capped, slots=2)
+    server.admit(RegJob(job_id="hard", rho_R=rho_R[3], rho_T=rho_T[3]))
+    with telemetry.ListSink() as sink:
+        res = server.run()[0]
+    assert not res.converged and res.status == "max_newton"
+    assert res.attempts == 1
+    job_recs = [r for r in sink.records if r["kind"] == "job"]
+    assert job_recs[0]["status"] == "max_newton"
+
+    server2 = CohortServer(grid, CFG, slots=2)
+    server2.admit(RegJob(job_id="easy", rho_R=rho_R[0], rho_T=rho_T[0]))
+    res2 = server2.run()[0]
+    assert res2.converged and res2.status == "converged"
+
+
 def test_server_rejects_continuation():
     from repro.launch.reg_serve import CohortServer
 

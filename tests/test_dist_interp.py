@@ -95,32 +95,51 @@ def test_batched_and_planned_halo_interp():
 def test_checked_interp_planned_overflow_paths():
     """Dynamic halo budget on the planned path: the cached
     ``InterpPlan.halo_need`` drives NaN-poisoning ("error") and the exact
-    global-gather fallback ("gather") when a step overshoots the budget."""
+    global-gather fallback ("gather") when a step overshoots the budget.
+    Both paths COUNT the violation — one ``halo_budget_exceeded`` event per
+    overflowing call lands in telemetry (resilience deliverable), and the
+    gather fallback's output is finite and exact."""
     run_multidevice(
         """
+        from repro import telemetry
         from repro.core.grid import make_grid
         from repro.dist.context import DistContext
         from repro.kernels import ref
         from repro.launch.mesh import make_mesh
+        from repro.resilience.faults import overflow_displacement
 
         halo = 3
         mesh = make_mesh((2, 4), ("data", "model"))
         grid = make_grid((16, 16, 32))
         rng = np.random.default_rng(8)
         f = jnp.asarray(rng.standard_normal((2,) + grid.shape), jnp.float32)
-        d = jnp.asarray(rng.uniform(-7.5, 7.5, (3,) + grid.shape), jnp.float32)
+        # the chaos harness manufactures a displacement that exceeds the
+        # budget by 2.5 voxels on every axis (and emits a FaultEvent)
+        d = jnp.asarray(overflow_displacement(grid.shape, halo))
 
-        ctx_e = DistContext(grid, mesh, halo=halo, halo_check="error")
-        fs = jax.device_put(f, ctx_e.vector_sharding())
-        ds = jax.device_put(d, ctx_e.vector_sharding())
-        plan = ctx_e.interp.make_plan(ds)
-        out = jax.jit(ctx_e.interp.apply_plan)(fs, plan)
-        assert bool(jnp.isnan(out).all()), "overflow must NaN-poison"
+        with telemetry.ListSink() as sink:
+            ctx_e = DistContext(grid, mesh, halo=halo, halo_check="error")
+            fs = jax.device_put(f, ctx_e.vector_sharding())
+            ds = jax.device_put(d, ctx_e.vector_sharding())
+            plan = ctx_e.interp.make_plan(ds)
+            out = jax.jit(ctx_e.interp.apply_plan)(fs, plan)
+            assert bool(jnp.isnan(out).all()), "overflow must NaN-poison"
 
-        ctx_g = DistContext(grid, mesh, halo=halo, halo_check="gather")
-        out_g = jax.jit(ctx_g.interp.apply_plan)(fs, plan)
-        expect = jnp.stack([ref.tricubic_displace(f[i], d) for i in range(2)])
-        assert float(jnp.max(jnp.abs(out_g - expect))) < 1e-4
+            ctx_g = DistContext(grid, mesh, halo=halo, halo_check="gather")
+            out_g = jax.jit(ctx_g.interp.apply_plan)(fs, plan)
+            expect = jnp.stack([ref.tricubic_displace(f[i], d) for i in range(2)])
+            assert bool(jnp.isfinite(out_g).all()), "gather fallback must stay finite"
+            assert float(jnp.max(jnp.abs(out_g - expect))) < 1e-4
+            jax.effects_barrier()  # flush the debug-callback counter events
+
+        # each overflowing apply counted exactly once, with the bound attrs
+        hits = [r for r in sink.records
+                if r["kind"] == "counter" and r["name"] == "halo_budget_exceeded"]
+        assert len(hits) == 2, [r["name"] for r in sink.records if r["kind"] == "counter"]
+        assert {h["attrs"]["mode"] for h in hits} == {"error", "gather"}
+        for h in hits:
+            assert h["attrs"]["required"] > h["attrs"]["budget"] == halo
+        assert telemetry.counters().get("halo_budget_exceeded", 0) >= 2
         """
     )
 

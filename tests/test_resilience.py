@@ -1,0 +1,254 @@
+"""Chaos suite: fault-tolerant solve & serve (repro.resilience).
+
+Acceptance pins (ISSUE 10):
+* NaN injected mid-cohort: the sick subject is caught in-graph
+  (``status="nonfinite"``), frozen finite, and retried through the
+  degradation ladder to completion — while every un-faulted job's
+  velocity is BIT-IDENTICAL to the fault-free run (per-lane independence
+  of the masked cohort recursions);
+* ONE compiled executable across injection / retirement / retry churn —
+  the beta-only degrade rung re-uses the primary bucket's program;
+* kill the serve loop at an arbitrary step, resume from the latest
+  snapshot: only unfinished jobs are re-served and every job's final
+  velocity and billing equal the uninterrupted run's.
+"""
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro import telemetry  # noqa: E402
+from repro.core import gauss_newton as gn  # noqa: E402
+from repro.data.synthetic import synthetic_problem  # noqa: E402
+from repro.launch.reg_serve import RegJob, serve_jobs  # noqa: E402
+from repro.resilience import health  # noqa: E402
+from repro.resilience.atomic import atomic_write_json  # noqa: E402
+from repro.resilience.faults import (  # noqa: E402
+    KillAt,
+    NaNInjector,
+    SimulatedCrash,
+)
+from repro.resilience.policy import (  # noqa: E402
+    DEFAULT_LADDER,
+    RetryPolicy,
+    static_key,
+)
+
+AMPS = (0.2, 0.6, 1.0, 1.4)
+CFG = gn.GNConfig(beta=1e-2, n_t=2, max_newton=8, gtol=1e-2, max_cg=20)
+
+
+@pytest.fixture(scope="module")
+def problems():
+    probs = [synthetic_problem(12, n_t=2, amplitude=a) for a in AMPS]
+    return probs[0][3], probs  # grid, [(rho_R, rho_T, v*, grid)...]
+
+
+def _jobs(probs):
+    return [
+        RegJob(job_id=f"job{s}", rho_R=p[0], rho_T=p[1])
+        for s, p in enumerate(probs)
+    ]
+
+
+@pytest.fixture(scope="module")
+def baseline(problems):
+    _, probs = problems
+    return serve_jobs(_jobs(probs), CFG, slots=2)
+
+
+# --------------------------------------------------------------------------- #
+# in-graph guard (solver level)
+# --------------------------------------------------------------------------- #
+def test_guard_flags_nan_input_and_freezes(problems):
+    grid, probs = problems
+    rho_R, rho_T = probs[0][0], probs[0][1]
+    out = gn.solve(rho_R, rho_T.at[0, 0, 0].set(jnp.nan), grid, CFG)
+    assert out["status"] == "nonfinite"
+    # guard short-circuits the stage: no silent max_newton spin
+    assert len(out["history"]) == 1
+    # the returned iterate is the last good one (here: the zero init)
+    assert np.isfinite(np.asarray(out["v"])).all()
+
+
+def test_guard_cohort_isolates_sick_subject(problems):
+    grid, probs = problems
+    R = jnp.stack([probs[0][0], probs[1][0]])
+    T_good = jnp.stack([probs[0][1], probs[1][1]])
+    T_bad = T_good.at[1].set(jnp.nan)
+    good = gn.solve_cohort(R, T_good, grid, CFG)
+    bad = gn.solve_cohort(R, T_bad, grid, CFG)
+    assert bad["status"][1] == "nonfinite"
+    assert np.isfinite(np.asarray(bad["v"])).all()
+    # the healthy lane is bit-identical despite its poisoned neighbor:
+    # batched transforms/reductions are per-lane independent and frozen
+    # lanes are masked out of every update
+    np.testing.assert_array_equal(np.asarray(bad["v"][0]), np.asarray(good["v"][0]))
+    assert bad["newton_iters"][0] == good["newton_iters"][0]
+    assert bad["hessian_matvecs"][0] == good["hessian_matvecs"][0]
+
+
+def test_guard_splits_stagnation_from_divergence():
+    # identical images: J(0) is already the minimum -> first step stagnates
+    # benignly (roundoff increases stay under DIVERGE_RTOL)
+    rho_R, _, _, grid = synthetic_problem(12, n_t=2, amplitude=0.5)
+    out = gn.solve(rho_R, rho_R, grid, CFG)
+    assert out["status"] in ("converged", "stagnated")
+    assert health.DIVERGE_RTOL > 0
+
+
+# --------------------------------------------------------------------------- #
+# retry policy (pure functions)
+# --------------------------------------------------------------------------- #
+def test_policy_beta_rung_shares_executable_key():
+    d2 = RetryPolicy().degraded(CFG, 2)
+    assert d2.beta == pytest.approx(CFG.beta * DEFAULT_LADDER[0].beta_scale)
+    # rung 1 is beta-only: same static (compiled-in) identity
+    assert static_key(d2) == static_key(CFG)
+    d3 = RetryPolicy().degraded(CFG, 3)
+    assert d3.field_dtype == "float32" and d3.interp_method == "ref"
+    assert d3.max_line_search >= 20
+    assert static_key(d3) != static_key(CFG)
+    # pure in (cfg, attempt): resume re-derives identical bucket configs
+    assert RetryPolicy().degraded(CFG, 3) == d3
+    assert RetryPolicy().degraded(CFG, 1) is CFG
+
+
+# --------------------------------------------------------------------------- #
+# chaos: NaN injection mid-serve
+# --------------------------------------------------------------------------- #
+def test_nan_injection_isolated_retried_one_executable(problems, baseline):
+    _, probs = problems
+    fault = NaNInjector(job_id="job1", field="v", at_iteration=1)
+    with telemetry.ListSink() as sink:
+        out = serve_jobs(
+            _jobs(probs), CFG, slots=2,
+            retry=RetryPolicy(max_attempts=2), faults=[fault],
+        )
+    assert fault.fired
+    res = {r.job_id: r for r in out["results"]}
+    ref = {r.job_id: r for r in baseline["results"]}
+    assert set(res) == set(ref)
+
+    # the faulted job was caught in-graph, retried degraded, and completed
+    assert res["job1"].attempts == 2
+    assert res["job1"].status not in health.FAILED_NAMES
+    assert np.isfinite(res["job1"].v).all()
+
+    # un-faulted jobs: bit-identical velocities and identical billing
+    for jid in ("job0", "job2", "job3"):
+        np.testing.assert_array_equal(res[jid].v, ref[jid].v)
+        assert res[jid].newton_iters == ref[jid].newton_iters, jid
+        assert res[jid].hessian_matvecs == ref[jid].hessian_matvecs, jid
+        assert res[jid].status == ref[jid].status, jid
+        assert res[jid].attempts == 1, jid
+
+    # ONE compiled executable across injection/retirement/retry churn:
+    # the beta-only rung re-uses the primary bucket's program
+    assert out["compiled_executables"] == 1
+    retry_keys = [k for k, st in out["buckets"].items() if st["attempt"] > 1]
+    assert len(retry_keys) == 1
+    assert out["buckets"][retry_keys[0]]["jobs"] == 1
+
+    # typed chaos trace: FaultEvent + RecoveryEvent + per-attempt JobEvents
+    kinds = [r["kind"] for r in sink.records]
+    assert "fault" in kinds and "recovery" in kinds
+    faults_ = [r for r in sink.records if r["kind"] == "fault"]
+    assert faults_[0]["fault"] == "nan_injection" and faults_[0]["target"] == "job1"
+    recov = [r for r in sink.records if r["kind"] == "recovery"]
+    assert recov[0]["action"] == "retry_degraded" and recov[0]["attempts"] == 2
+    job_evts = [r for r in sink.records if r["kind"] == "job" and r["job_id"] == "job1"]
+    assert [e["attempts"] for e in job_evts] == [1, 2]
+    assert job_evts[0]["status"] == "nonfinite"
+    for rec in sink.records:
+        assert telemetry.validate_record(rec) == [], rec["kind"]
+
+
+# --------------------------------------------------------------------------- #
+# chaos: kill + resume from checkpointed job stream
+# --------------------------------------------------------------------------- #
+def test_kill_and_resume_reserves_only_unfinished(problems, tmp_path):
+    _, probs = problems
+    # uninterrupted reference (checkpointing on: identical code path)
+    ref_out = serve_jobs(
+        _jobs(probs), CFG, slots=2,
+        checkpoint=str(tmp_path / "ref"), checkpoint_every=2,
+    )
+    ref = {r.job_id: r for r in ref_out["results"]}
+
+    ck = str(tmp_path / "ck")
+    kill = KillAt(at_iteration=4)
+    with pytest.raises(SimulatedCrash):
+        serve_jobs(_jobs(probs), CFG, slots=2,
+                   checkpoint=ck, checkpoint_every=2, faults=[kill])
+    assert kill.fired
+
+    # resume: the snapshot is standalone — the job list is NOT re-passed
+    with telemetry.ListSink() as sink:
+        out2 = serve_jobs([], CFG, slots=2, checkpoint=ck,
+                          checkpoint_every=2, resume=True)
+    res = {r.job_id: r for r in out2["results"]}
+    assert set(res) == set(ref)
+    for jid, r in ref.items():
+        np.testing.assert_array_equal(res[jid].v, r.v)
+        assert res[jid].newton_iters == r.newton_iters, jid
+        assert res[jid].hessian_matvecs == r.hessian_matvecs, jid
+        assert res[jid].status == r.status, jid
+
+    # only unfinished jobs were re-served: the resumed session picked up
+    # mid-stream (iterations continued, not restarted) and some jobs were
+    # already completed in the snapshot
+    recov = [r for r in sink.records if r["kind"] == "recovery"]
+    assert recov and recov[0]["action"] == "resume_from_checkpoint"
+    assert recov[0]["attrs"]["completed"] + recov[0]["attrs"]["unfinished"] == len(probs)
+    assert recov[0]["attrs"]["unfinished"] < len(probs)
+    shape_key = tuple(np.shape(probs[0][0]))
+    assert out2["buckets"][shape_key]["cohort_iterations"] == \
+        ref_out["buckets"][shape_key]["cohort_iterations"]
+    # jobs completed before the kill emit no new JobEvent on resume
+    served_ids = {r["job_id"] for r in sink.records if r["kind"] == "job"}
+    assert len(served_ids) == recov[0]["attrs"]["unfinished"]
+
+    # resuming a COMPLETED stream re-serves nothing and returns everything
+    out3 = serve_jobs([], CFG, slots=2, checkpoint=ck, resume=True)
+    assert {r.job_id for r in out3["results"]} == set(ref)
+
+
+# --------------------------------------------------------------------------- #
+# crash-safe JSON writes
+# --------------------------------------------------------------------------- #
+def test_atomic_write_json_roundtrip_and_failure_keeps_old(tmp_path):
+    import json
+
+    path = str(tmp_path / "nested" / "out.json")
+    atomic_write_json(path, {"a": 1})
+    assert json.load(open(path)) == {"a": 1}
+    # a serialization failure mid-write never touches the real file ...
+    with pytest.raises(TypeError):
+        atomic_write_json(path, {"bad": object()})
+    assert json.load(open(path)) == {"a": 1}
+    # ... and leaves no temp debris behind
+    assert os.listdir(os.path.dirname(path)) == ["out.json"]
+
+
+def test_autotune_cache_write_is_atomic(tmp_path, monkeypatch):
+    """Concurrent-writer hazard: the cache's temp names are pid-unique."""
+    from repro.autotune import cache as ac
+
+    path = str(tmp_path / "tuning.json")
+    c = ac.TuningCache(path)
+    seen = {}
+
+    real_replace = os.replace
+
+    def spy(src, dst):
+        seen["tmp"] = os.path.basename(src)
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", spy)
+    c._write({})
+    assert seen["tmp"].endswith(f".tmp.{os.getpid()}")
